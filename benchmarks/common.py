@@ -1,0 +1,27 @@
+"""Shared benchmark utilities: wall-clock timing with warmup + best-of-k."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+__all__ = ["time_fn", "csv_row"]
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds of fn(*args) after warmup (JIT compile excluded)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def csv_row(name: str, seconds: float, derived: str = "") -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"

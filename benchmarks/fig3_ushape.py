@@ -1,0 +1,29 @@
+"""Paper Fig. 3: wall-clock vs partition count b for each matrix size —
+both SPIN and LU must show the U shape and SPIN must win per-(n, b)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import lu_inverse_dense, spin_inverse_dense, testing
+from .common import csv_row, time_fn
+
+SIZES = (1024, 2048)
+SPLITS = (2, 4, 8, 16, 32)
+
+
+def run(emit) -> dict:
+    out = {}
+    for n in SIZES:
+        a = testing.make_spd(n, jax.random.PRNGKey(n))
+        for b in SPLITS:
+            bs = n // b
+            if bs < 16 or n % b:
+                continue
+            t_spin = time_fn(lambda x: spin_inverse_dense(x, bs), a)
+            t_lu = time_fn(lambda x: lu_inverse_dense(x, bs), a)
+            out[(n, b)] = (t_spin, t_lu)
+            emit(csv_row(f"fig3/spin/n{n}/b{b}", t_spin))
+            emit(csv_row(f"fig3/lu/n{n}/b{b}", t_lu,
+                         f"spin_speedup={t_lu / t_spin:.2f}x"))
+    return out

@@ -1,0 +1,48 @@
+"""Paper Fig. 4: theoretical cost model vs experimental wall clock.
+
+Calibrates the Lemma-4.1 model's three unit-time constants on HALF of the
+measured (b -> seconds) points (least squares, as the paper fits its
+constants) and reports prediction quality on the held-out half."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import spin_inverse_dense, testing
+from repro.core.costmodel import CostParams, fit_scale, spin_cost
+from .common import csv_row, time_fn
+
+N = 1024
+SPLITS = (2, 4, 8, 16, 32)
+CORES = 1          # this container
+
+
+def run(emit) -> dict:
+    a = testing.make_spd(N, jax.random.PRNGKey(N))
+    measured = {}
+    for b in SPLITS:
+        bs = N // b
+        if bs < 16:
+            continue
+        measured[b] = time_fn(lambda x: spin_inverse_dense(x, bs), a)
+
+    train = {b: t for i, (b, t) in enumerate(sorted(measured.items()))
+             if i % 2 == 0}
+    fit = fit_scale(spin_cost, train, n=N, cores=CORES)
+
+    out = {}
+    errs = []
+    for b, t_meas in sorted(measured.items()):
+        pred = spin_cost(CostParams(n=N, b=b, cores=CORES, t_flop=fit.t_flop,
+                                    t_leaf=fit.t_leaf,
+                                    t_block_op=fit.t_block_op,
+                                    t_elem=fit.t_elem))["total"]
+        held = "heldout" if b not in train else "fit"
+        rel = abs(pred - t_meas) / t_meas
+        errs.append(rel)
+        out[b] = (t_meas, pred)
+        emit(csv_row(f"fig4/n{N}/b{b}", t_meas,
+                     f"pred_us={pred * 1e6:.1f};{held};rel_err={rel:.2f}"))
+    emit(f"fig4/mean_rel_err,,{float(np.mean(errs)):.3f}")
+    return out

@@ -1,0 +1,117 @@
+"""Roofline analysis: three terms per (arch × shape × mesh) from the
+dry-run's compiled artifacts (experiments/dryrun/*.json).
+
+    compute    = HLO_FLOPs   / (chips × 197e12)      [bf16 peak, v5e]
+    memory     = HLO_bytes   / (chips × 819e9)       [HBM BW]
+    collective = coll_bytes  / (chips × 50e9)        [ICI per link]
+
+cost_analysis() and the HLO collective parse are per-device, so global =
+per-device × chips and the division by chips cancels — terms below use the
+per-device values directly (identical result, stated for clarity).
+
+MODEL_FLOPS: train 6·N·D (MoE: active params; ~8·N·D with full remat is the
+honest ceiling and noted), prefill 2·N·D, decode 2·N·batch. The ratio
+MODEL_FLOPS / HLO_FLOPs exposes remat/attention/capacity-slack overheads.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import SHAPES, get_arch
+from .common import csv_row
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def model_flops(arch_name: str, shape_name: str) -> float:
+    cfg = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch          # decode: per token
+
+
+def advice(bottleneck: str, rec: dict) -> str:
+    arch, shape = rec["arch"], rec["shape"]
+    if bottleneck == "collective":
+        return ("shard sequence over `model` (SP) so TP boundary psums become "
+                "reduce-scatters and activations stay sharded")
+    if bottleneck == "memory":
+        if rec["kind"] == "decode":
+            return ("decode is KV/state-bandwidth bound by construction; "
+                    "quantize the KV cache or widen batch to amortize reads")
+        return "raise arithmetic intensity: larger microbatch or fused matmuls"
+    return "compute-bound — already at the good end; tune MXU tiling/remat"
+
+
+def analyze(rec: dict) -> dict | None:
+    if not rec.get("runnable") or "error" in rec or "cost" not in rec:
+        return None
+    cost = rec["cost"]
+    t_compute = cost["flops"] / PEAK_FLOPS
+    t_memory = cost["bytes_accessed"] / HBM_BW
+    t_coll = cost["coll_bytes"] / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    step_time = max(terms.values())
+    mf = model_flops(rec["arch"], rec["shape"])
+    chips = rec["chips"]
+    hlo_global = cost["flops"] * chips
+    ratio = mf / hlo_global if hlo_global else 0.0
+    # roofline fraction: useful model flops per chip-second at the modeled
+    # step time vs peak
+    mfu = (mf / chips / step_time) / PEAK_FLOPS if step_time > 0 else 0.0
+    return dict(rec=rec, t_compute=t_compute, t_memory=t_memory,
+                t_collective=t_coll, bottleneck=bottleneck,
+                model_flops=mf, hlo_flops_global=hlo_global,
+                useful_ratio=ratio, roofline_fraction=mfu,
+                advice=advice(bottleneck, rec))
+
+
+def run(emit, dryrun_dir: str = "experiments/dryrun",
+        out_md: str = "experiments/roofline.md") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(path))
+        a = analyze(rec)
+        if a is None:
+            if not rec.get("runnable", True):
+                rows.append(dict(rec=rec, skipped=rec.get("skip_reason")))
+            continue
+        rows.append(a)
+        r = a["rec"]
+        emit(csv_row(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}/{r['rules']}",
+            max(a["t_compute"], a["t_memory"], a["t_collective"]),
+            f"bottleneck={a['bottleneck']};mfu={a['roofline_fraction']:.3f};"
+            f"useful={a['useful_ratio']:.2f}"))
+
+    if rows:
+        os.makedirs(os.path.dirname(out_md), exist_ok=True)
+        with open(out_md, "w") as f:
+            f.write("| arch | shape | mesh | rules | compute s | memory s | "
+                    "collective s | bottleneck | MODEL_FLOPS | useful ratio | "
+                    "roofline frac | next move |\n|" + "---|" * 12 + "\n")
+            for a in rows:
+                r = a["rec"]
+                if "skipped" in a:
+                    f.write(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                            f"{r.get('rules', '-')} | — | — | — | skipped: "
+                            f"{a['skipped']} | — | — | — | — |\n")
+                    continue
+                f.write(
+                    f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                    f"{r['rules']} | {a['t_compute']:.4f} | "
+                    f"{a['t_memory']:.4f} | {a['t_collective']:.4f} | "
+                    f"{a['bottleneck']} | {a['model_flops']:.3e} | "
+                    f"{a['useful_ratio']:.2f} | {a['roofline_fraction']:.3f} "
+                    f"| {a['advice']} |\n")
+    return rows

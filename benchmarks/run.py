@@ -1,0 +1,37 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Roofline rows additionally
+regenerate experiments/roofline.md from the dry-run JSONs when present.
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    args = set(sys.argv[1:])
+    emit = print
+    print("name,us_per_call,derived")
+
+    from . import (fig2_compare, fig3_ushape, fig4_theory, fig5_scaling,
+                   table3_breakdown, roofline)
+
+    jobs = {
+        "fig2": fig2_compare.run,
+        "fig3": fig3_ushape.run,
+        "fig4": fig4_theory.run,
+        "fig5": fig5_scaling.run,
+        "table3": table3_breakdown.run,
+        "roofline": roofline.run,
+    }
+    selected = {k: v for k, v in jobs.items() if not args or k in args}
+    for name, job in selected.items():
+        try:
+            job(emit)
+        except Exception as e:  # noqa: BLE001 — report, keep the suite going
+            emit(f"{name}/FAILED,0,{type(e).__name__}:{e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Application example: distributed ridge regression via SPIN.
+
+The paper motivates matrix inversion with Data/Earth-science workloads;
+ridge regression is the canonical one:  w = (XᵀX + λI)⁻¹ Xᵀ y.
+The Gram matrix is assembled as a BlockMatrix and inverted with the
+paper's algorithm (optionally on a device mesh — same code).
+
+    PYTHONPATH=src python examples/ridge_regression.py --features 1024
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import BlockMatrix, newton_schulz_polish, spin_inverse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--samples", type=int, default=4096)
+    ap.add_argument("--features", type=int, default=1024)
+    ap.add_argument("--block", type=int, default=128)
+    ap.add_argument("--lam", type=float, default=1e-2)
+    args = ap.parse_args()
+
+    key = jax.random.PRNGKey(0)
+    kx, kw, kn = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (args.samples, args.features)) / \
+        args.features ** 0.5
+    w_true = jax.random.normal(kw, (args.features,))
+    y = x @ w_true + 0.01 * jax.random.normal(kn, (args.samples,))
+
+    gram = x.T @ x + args.lam * jnp.eye(args.features)
+    rhs = x.T @ y
+
+    t0 = time.perf_counter()
+    a = BlockMatrix.from_dense(gram, args.block)
+    inv = spin_inverse(a)
+    inv = newton_schulz_polish(a, inv, sweeps=1)
+    w_hat = inv.to_dense() @ rhs
+    jax.block_until_ready(w_hat)
+    dt = time.perf_counter() - t0
+
+    rel = float(jnp.linalg.norm(w_hat - w_true) / jnp.linalg.norm(w_true))
+    resid = float(jnp.linalg.norm(gram @ w_hat - rhs) /
+                  jnp.linalg.norm(rhs))
+    print(f"ridge {args.samples}x{args.features}: solved in {dt * 1e3:.0f} ms"
+          f"  ||w-w*||/||w*||={rel:.2e}  normal-eq residual={resid:.2e}")
+    assert resid < 1e-3
+
+
+if __name__ == "__main__":
+    main()

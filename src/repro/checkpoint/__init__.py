@@ -1,0 +1,3 @@
+from .ckpt import async_save, latest_step, list_steps, restore, save
+
+__all__ = ["async_save", "latest_step", "list_steps", "restore", "save"]

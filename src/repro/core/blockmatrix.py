@@ -1,0 +1,215 @@
+"""BlockMatrix: the distributed block data structure from SPIN (§3.2), on JAX.
+
+The paper stores an n×n matrix as a Spark RDD of ((rowIndex, colIndex), block)
+tuples. On a TPU mesh the natural analogue is a single array of shape
+``(b, b, bs, bs)`` — a b×b grid of bs×bs blocks — whose *grid* axes are
+sharded over the device mesh (``PartitionSpec('data', 'model')``). Every
+method of the paper's BlockMatrix API (breakMat/xy/multiply/subtract/
+scalarMul/arrange) maps to a pure function here; breakMat/xy/arrange become
+trace-time slicing (free on TPU — no tagging/shuffle pass), which is recorded
+as a structural win in DESIGN.md §2.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "BlockMatrix",
+    "OpCounts",
+    "count_ops",
+    "current_counts",
+    "block_sharding",
+    "constrain_grid",
+]
+
+
+# ---------------------------------------------------------------------------
+# Operation accounting (used by tests to assert the paper's op counts and by
+# benchmarks to report the Table-1 style breakdown).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class OpCounts:
+    multiplies: int = 0          # BlockMatrix-level multiply() calls
+    block_gemms: int = 0         # bs×bs GEMMs implied by those multiplies
+    subtracts: int = 0
+    scalar_muls: int = 0
+    leaf_inversions: int = 0
+    leaf_lu: int = 0
+    arranges: int = 0
+    splits: int = 0
+
+    def as_dict(self) -> dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+_COUNTS: contextvars.ContextVar[OpCounts | None] = contextvars.ContextVar(
+    "blockmatrix_op_counts", default=None
+)
+
+
+@contextlib.contextmanager
+def count_ops() -> Iterator[OpCounts]:
+    """Context manager that records BlockMatrix op counts (trace-time)."""
+    counts = OpCounts()
+    token = _COUNTS.set(counts)
+    try:
+        yield counts
+    finally:
+        _COUNTS.reset(token)
+
+
+def current_counts() -> OpCounts | None:
+    return _COUNTS.get()
+
+
+def _bump(field: str, by: int = 1) -> None:
+    counts = _COUNTS.get()
+    if counts is not None:
+        setattr(counts, field, getattr(counts, field) + by)
+
+
+# ---------------------------------------------------------------------------
+# Sharding helpers
+# ---------------------------------------------------------------------------
+
+
+def block_sharding(mesh, grid_axes=("data", "model")) -> NamedSharding:
+    """Sharding that puts the block *grid* over the mesh, blocks replicated."""
+    return NamedSharding(mesh, P(*grid_axes, None, None))
+
+
+def constrain_grid(blocks: jax.Array, grid_axes=("data", "model")) -> jax.Array:
+    """Attach a grid-over-mesh sharding constraint inside jit (no-op outside)."""
+    try:
+        return jax.lax.with_sharding_constraint(blocks, P(*grid_axes, None, None))
+    except (ValueError, RuntimeError):
+        # Outside a mesh context (single-device tests) constraints don't apply.
+        return blocks
+
+
+# ---------------------------------------------------------------------------
+# BlockMatrix
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class BlockMatrix:
+    """A b×b grid of bs×bs blocks, stored as one (b, b, bs, bs) array."""
+
+    blocks: jax.Array
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.blocks,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0])
+
+    # -- shape accessors ----------------------------------------------------
+    @property
+    def grid(self) -> int:
+        """Number of block rows (= block cols); the paper's ``b``."""
+        return self.blocks.shape[0]
+
+    @property
+    def block_size(self) -> int:
+        """Side of one block; the paper's ``n / b``."""
+        return self.blocks.shape[2]
+
+    @property
+    def n(self) -> int:
+        return self.grid * self.block_size
+
+    @property
+    def dtype(self):
+        return self.blocks.dtype
+
+    # -- conversions ----------------------------------------------------------
+    @classmethod
+    def from_dense(cls, dense: jax.Array, block_size: int) -> "BlockMatrix":
+        n = dense.shape[0]
+        if dense.ndim != 2 or dense.shape[0] != dense.shape[1]:
+            raise ValueError(f"expected square matrix, got {dense.shape}")
+        if n % block_size:
+            raise ValueError(f"n={n} not divisible by block_size={block_size}")
+        b = n // block_size
+        blocks = dense.reshape(b, block_size, b, block_size).transpose(0, 2, 1, 3)
+        return cls(blocks)
+
+    def to_dense(self) -> jax.Array:
+        b, _, bs, _ = self.blocks.shape
+        return self.blocks.transpose(0, 2, 1, 3).reshape(b * bs, b * bs)
+
+    # -- paper methods (breakMat / xy fused into one trace-time split) ------
+    def split(self) -> tuple["BlockMatrix", "BlockMatrix", "BlockMatrix", "BlockMatrix"]:
+        """breakMat + _11/_12/_21/_22 of the paper, at trace time.
+
+        Spark needs a tag+filter shuffle pass; on an already-sharded array
+        this is pure indexing that XLA folds into the consumers.
+        """
+        b = self.grid
+        if b % 2:
+            raise ValueError(f"cannot split odd grid b={b}")
+        h = b // 2
+        _bump("splits")
+        blk = self.blocks
+        return (
+            BlockMatrix(blk[:h, :h]),
+            BlockMatrix(blk[:h, h:]),
+            BlockMatrix(blk[h:, :h]),
+            BlockMatrix(blk[h:, h:]),
+        )
+
+    @staticmethod
+    def arrange(
+        c11: "BlockMatrix", c12: "BlockMatrix", c21: "BlockMatrix", c22: "BlockMatrix"
+    ) -> "BlockMatrix":
+        """The paper's arrange: four quadrants -> one matrix (Algorithm 6)."""
+        _bump("arranges")
+        top = jnp.concatenate([c11.blocks, c12.blocks], axis=1)
+        bot = jnp.concatenate([c21.blocks, c22.blocks], axis=1)
+        return BlockMatrix(jnp.concatenate([top, bot], axis=0))
+
+    # -- arithmetic ----------------------------------------------------------
+    def subtract(self, other: "BlockMatrix") -> "BlockMatrix":
+        _bump("subtracts")
+        return BlockMatrix(self.blocks - other.blocks)
+
+    def add(self, other: "BlockMatrix") -> "BlockMatrix":
+        _bump("subtracts")  # same cost class as subtract in the paper's model
+        return BlockMatrix(self.blocks + other.blocks)
+
+    def scalar_mul(self, scalar) -> "BlockMatrix":
+        _bump("scalar_muls")
+        return BlockMatrix(self.blocks * scalar)
+
+    def neg(self) -> "BlockMatrix":
+        return self.scalar_mul(-1.0)
+
+    def transpose(self) -> "BlockMatrix":
+        return BlockMatrix(self.blocks.transpose(1, 0, 3, 2))
+
+    @classmethod
+    def identity(cls, grid: int, block_size: int, dtype=jnp.float32) -> "BlockMatrix":
+        eye_block = jnp.eye(block_size, dtype=dtype)
+        grid_eye = jnp.eye(grid, dtype=dtype)[:, :, None, None]
+        return cls(grid_eye * eye_block[None, None])
+
+    @classmethod
+    def zeros(cls, grid: int, block_size: int, dtype=jnp.float32) -> "BlockMatrix":
+        return cls(jnp.zeros((grid, grid, block_size, block_size), dtype=dtype))
+
+    def with_grid_sharding(self, grid_axes=("data", "model")) -> "BlockMatrix":
+        return BlockMatrix(constrain_grid(self.blocks, grid_axes))

@@ -1,0 +1,237 @@
+"""Paper §4 cost models (Lemmas 4.1 / 4.2) + a TPU-native roofline variant.
+
+The paper expresses wall-clock cost as Σ_levels (work / parallelization
+factor), with the parallelization factor min(items_in_flight, cores). Rather
+than the collapsed closed forms of Eq. (1)/(12) — which leave a dangling
+level index `i` inside `min(·)` — we evaluate the per-level sums directly
+from Table 1, which is what those closed forms approximate. `fit_scale`
+calibrates the model's abstract op units to seconds against measurements
+(one multiplicative constant per cost class), mirroring the paper's Fig. 4
+theory-vs-practice comparison.
+
+`spin_schedule` additionally exposes the exact (method, shape, count) trace
+per recursion level so benchmarks can reproduce the paper's Table 3
+per-method wall-clock breakdown under JIT (where fused methods cannot be
+timed in situ).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import numpy as np
+
+__all__ = [
+    "CostParams", "spin_cost", "lu_cost", "spin_schedule",
+    "tpu_roofline_cost", "fit_scale",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class CostParams:
+    n: int              # matrix dimension (2^p)
+    b: int              # number of splits per side (2^(p-q))
+    cores: int          # paper's `cores`; = chips on TPU
+    # calibration constants (seconds per abstract unit); fit via fit_scale()
+    t_flop: float = 1e-9        # per scalar flop in distributed multiplies
+    t_block_op: float = 1e-6    # per block-touch in breakMat/xy/arrange class
+    t_elem: float = 1e-9        # per element in subtract/scalarMul class
+    # leaf inversions run a different code path (serial LAPACK/JBlas vs
+    # distributed GEMM) — their own rate, like the paper's separate leafNode
+    # instrumentation. None -> share t_flop.
+    t_leaf: float | None = None
+
+    @property
+    def levels(self) -> int:
+        return int(math.log2(self.b))
+
+    @property
+    def block_size(self) -> int:
+        return self.n // self.b
+
+
+def _pf(items: float, cores: int) -> float:
+    return max(1.0, min(items, cores))
+
+
+def spin_cost(p: CostParams) -> dict[str, float]:
+    """Lemma 4.1 evaluated per level. Returns per-method seconds + total."""
+    n, b, cores = p.n, p.b, p.cores
+    bs = p.block_size
+    m = p.levels
+    c: dict[str, float] = {k: 0.0 for k in (
+        "leafNode", "breakMat", "xy", "multiply", "subtract", "scalar",
+        "arrange")}
+
+    # Leaf: 2^m = b leaf nodes, one (n/b)^3 inversion each, parallel across
+    # leaves is impossible (the recursion serializes A11 before V), so the
+    # paper books them sequentially: b * (n/b)^3 = n^3/b^2.  (Eq. 2)
+    t_leaf = p.t_flop if p.t_leaf is None else p.t_leaf
+    c["leafNode"] = b * bs**3 * t_leaf
+
+    for i in range(m):
+        nodes = 2**i
+        gb = b // 2**i            # grid side of this level's matrices
+        half = gb // 2
+        blocks_lvl = gb * gb
+        sub_n = n // 2**i          # matrix dim at this level
+        # breakMat touches every block once (Eq. 3/4)
+        c["breakMat"] += nodes * blocks_lvl * p.t_block_op / _pf(blocks_lvl, cores)
+        # xy: 4 filters over all blocks + 4 maps over quadrant blocks (Eq. 5)
+        c["xy"] += nodes * (4 * blocks_lvl * p.t_block_op / _pf(blocks_lvl, cores)
+                            + 4 * (blocks_lvl // 4) * p.t_block_op
+                            / _pf(blocks_lvl // 4, cores))
+        # multiply: 6 half-size block-grid multiplies, (half)^3 block GEMMs of
+        # bs^3 flops each; PF = min((sub_n/2)^2, cores) per the paper (Eq. 6/7)
+        gemm_flops = 6 * half**3 * bs**3
+        c["multiply"] += nodes * gemm_flops * p.t_flop / _pf((sub_n / 2)**2, cores)
+        # subtract: 2 per level over (sub_n/2)^2 elements (Eq. 8/9)
+        c["subtract"] += nodes * 2 * (sub_n / 2)**2 * p.t_elem / _pf((sub_n / 2)**2, cores)
+        # scalarMul: 1 per level over quadrant blocks (Eq. 10/11)
+        c["scalar"] += nodes * (blocks_lvl // 4) * p.t_block_op / _pf(blocks_lvl // 4, cores)
+        # arrange: 4 maps over quadrant blocks (same cost class as scalarMul)
+        c["arrange"] += nodes * 4 * (blocks_lvl // 4) * p.t_block_op / _pf(blocks_lvl // 4, cores)
+
+    c["total"] = sum(c.values())
+    return c
+
+
+def lu_cost(p: CostParams) -> dict[str, float]:
+    """Lemma 4.2 evaluated per level (Liu et al. optimized variant)."""
+    n, b, cores = p.n, p.b, p.cores
+    bs = p.block_size
+    m = p.levels
+    c: dict[str, float] = {k: 0.0 for k in (
+        "leafNode", "breakMat", "xy", "multiply", "subtract", "scalar",
+        "additional")}
+
+    # 9 O(bs^3) ops per leaf (2 LU + 4 tri-inv + 3 mult), b leaves (Eq. 14)
+    t_leaf = p.t_flop if p.t_leaf is None else p.t_leaf
+    c["leafNode"] = 9 * b * bs**3 * t_leaf
+
+    for i in range(m):
+        # LU recursion has 2^i - 1 -> use paper's note: 2^i nodes for SPIN,
+        # ~2^i for LU at level i with the -1 correction.
+        nodes = max(2**i - 1, 1) if i else 1
+        gb = b // 2**i
+        half = gb // 2
+        blocks_lvl = gb * gb
+        sub_n = n // 2**i
+        c["breakMat"] += nodes * blocks_lvl * p.t_block_op / _pf(blocks_lvl, cores)
+        c["xy"] += nodes * (4 * blocks_lvl * p.t_block_op / _pf(blocks_lvl, cores)
+                            + 4 * (blocks_lvl // 4) * p.t_block_op
+                            / _pf(blocks_lvl // 4, cores))
+        # 7 multiplies inside the joint LU+inverse recursion + 4 inside getLU
+        # bookkeeping ~ the paper's 12-multiplies-per-level characterization;
+        # we charge 12 half-grid multiplies.
+        gemm_flops = 12 * half**3 * bs**3
+        c["multiply"] += nodes * gemm_flops * p.t_flop / _pf((sub_n / 2)**2, cores)
+        c["subtract"] += nodes * (sub_n / 2)**2 * p.t_elem / _pf((sub_n / 2)**2, cores)
+        c["scalar"] += nodes * 2 * (blocks_lvl // 4) * p.t_block_op / _pf(blocks_lvl // 4, cores)
+
+    # Additional cost: 7 multiplies of dimension n/2 after decomposition
+    c["additional"] = 7 * (n / 2)**3 * p.t_flop / _pf((n / 2)**2 / 4, cores)
+    c["total"] = sum(c.values())
+    return c
+
+
+def spin_schedule(n: int, block_size: int) -> list[dict]:
+    """Exact per-level (method, count, operand dims) trace of Algorithm 2.
+
+    Used by benchmarks/table3_breakdown.py to time each method standalone at
+    the exact shapes the recursion invokes it with.
+    """
+    b = n // block_size
+    m = int(math.log2(b))
+    out = []
+    for i in range(m):
+        nodes = 2**i
+        gb = b // 2**i
+        sub_n = n // 2**i
+        out.append(dict(level=i, nodes=nodes, grid=gb, sub_n=sub_n,
+                        multiplies=6, subtracts=2, scalar_muls=1,
+                        splits=1, arranges=1))
+    out.append(dict(level=m, nodes=b, grid=1, sub_n=block_size,
+                    leaf_inversions=1))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# TPU-native roofline model (DESIGN.md §2): same decomposition, hardware terms
+# ---------------------------------------------------------------------------
+
+TPU_V5E = dict(peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9)
+
+
+def tpu_roofline_cost(n: int, b: int, chips: int, *, dtype_bytes: int = 2,
+                      hw: dict = TPU_V5E) -> dict[str, float]:
+    """Three-term roofline for one SPIN inversion on a TPU mesh.
+
+    compute:   6 multiplies/level, 2·(gb/2)^3·bs^3 flops each (MAC=2 flops)
+    memory:    operands+results of each level's multiplies through HBM
+    collective:SUMMA ring moves each B panel (√P−1)/√P of total B bytes along
+               the ring per multiply.
+    """
+    bs = n // b
+    m = int(math.log2(b))
+    flops = bytes_hbm = bytes_ici = 0.0
+    side = max(1, int(math.isqrt(chips)))
+    for i in range(m):
+        nodes = 2**i
+        half_n = n / 2**(i + 1)
+        lvl_flops = nodes * 6 * 2 * half_n**3
+        flops += lvl_flops
+        bytes_hbm += nodes * 6 * 3 * half_n**2 * dtype_bytes
+        bytes_ici += nodes * 6 * half_n**2 * dtype_bytes * (side - 1) / side
+    flops += b * 2 * bs**3 / 3 * 2       # leaves (GJ ~ 2n^3/3 MACs)
+    bytes_hbm += b * 2 * bs**2 * dtype_bytes
+    t_compute = flops / (chips * hw["peak_flops"])
+    t_memory = bytes_hbm / (chips * hw["hbm_bw"])
+    t_collective = bytes_ici / (chips * hw["ici_bw"])
+    return dict(flops=flops, bytes_hbm=bytes_hbm, bytes_ici=bytes_ici,
+                t_compute=t_compute, t_memory=t_memory,
+                t_collective=t_collective,
+                total=max(t_compute, t_memory, t_collective),
+                bottleneck=max(
+                    ("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_collective), key=lambda kv: kv[1])[0])
+
+
+def fit_scale(model_fn: Callable[[CostParams], dict], measured: dict[int, float],
+              n: int, cores: int) -> CostParams:
+    """Least-squares fit of (t_flop, t_leaf, t_block_op, t_elem) to measured
+    seconds. measured: {b: wall_seconds}. Returns calibrated CostParams."""
+    def basis(b, **kw):
+        defaults = dict(t_flop=0.0, t_leaf=0.0, t_block_op=0.0, t_elem=0.0)
+        defaults.update(kw)
+        return model_fn(CostParams(n=n, b=b, cores=cores, **defaults))["total"]
+
+    rows, ys = [], []
+    for b, secs in measured.items():
+        rows.append([basis(b, t_flop=1.0), basis(b, t_leaf=1.0),
+                     basis(b, t_block_op=1.0), basis(b, t_elem=1.0)])
+        ys.append(secs)
+    a = np.asarray(rows)
+    y = np.asarray(ys)
+    # non-negative least squares by exhaustive active set (4 columns):
+    # clipping a plain lstsq solution is NOT the NNLS optimum and can
+    # overshoot every point when columns are near-colinear.
+    best_coef, best_res = np.zeros(4), float(np.sum(y ** 2))
+    import itertools
+    for k in range(1, 5):
+        for cols in itertools.combinations(range(4), k):
+            sub = a[:, cols]
+            c, *_ = np.linalg.lstsq(sub, y, rcond=None)
+            if np.any(c < 0):
+                continue
+            res = float(np.sum((sub @ c - y) ** 2))
+            if res < best_res:
+                best_res = res
+                best_coef = np.zeros(4)
+                best_coef[list(cols)] = c
+    coef = best_coef
+    return CostParams(n=n, b=max(measured), cores=cores,
+                      t_flop=float(coef[0]), t_leaf=float(coef[1]),
+                      t_block_op=float(coef[2]), t_elem=float(coef[3]))

@@ -1,0 +1,142 @@
+"""The comparison baseline: block-recursive LU inversion (Liu et al. [10]).
+
+The paper (§1, Table 1) characterizes the *most optimized* Spark LU inversion
+as: 9 O((n/b)^3) ops at each leaf (2 LU + 4 triangular inversions + 3
+multiplies), ~12 block multiplies per recursion level of the LU phase, plus 7
+half-size multiplies after decomposition. We implement that algorithm
+faithfully on the same BlockMatrix substrate so SPIN and LU share every
+distributed primitive — exactly the comparison the paper runs.
+
+Recursion (returns L, U, Linv, Uinv jointly — Liu et al.'s trick to avoid
+re-factorizing during the inversion phase):
+
+    leaf: L, U = lu(A);  Linv = tri_inv(L);  Uinv = tri_inv(U)
+    else: A = [[A11, A12], [A21, A22]]
+          L11,U11,L11i,U11i = rec(A11)
+          U12 = L11i · A12                       (multiply 1)
+          L21 = A21 · U11i                       (multiply 2)
+          S   = A22 − L21 · U12                  (multiply 3)
+          L22,U22,L22i,U22i = rec(S)
+          Linv21 = −L22i · (L21 · L11i)          (multiplies 4,5)
+          Uinv12 = −U11i · (U12 · U22i)          (multiplies 6,7)
+          assemble L, U, Linv, Uinv
+    top:  A^{-1} = Uinv · Linv  — five half-size multiplies exploiting
+          triangularity (the paper books this as the "Additional Cost",
+          7·(n/2)^3 in Liu's variant).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .blockmatrix import BlockMatrix, _bump
+from .multiply import multiply
+
+__all__ = ["lu_inverse", "lu_inverse_dense", "block_lu"]
+
+
+class _LU(NamedTuple):
+    l: BlockMatrix
+    u: BlockMatrix
+    linv: BlockMatrix
+    uinv: BlockMatrix
+
+
+def _local_lu(block: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Unpivoted dense LU of one block (valid for SPD / diag-dominant)."""
+    n = block.shape[0]
+    a = block.astype(jnp.float32)
+
+    def step(k, a):
+        col = a[:, k]
+        pivot = a[k, k]
+        rows = jnp.arange(n)
+        factors = jnp.where(rows > k, col / pivot, 0.0)
+        a = a - jnp.outer(factors, jnp.where(rows >= k, a[k, :], 0.0))
+        # store multipliers in the strictly-lower triangle (compact LU)
+        a = a.at[:, k].set(jnp.where(rows > k, factors, a[:, k]))
+        return a
+
+    a = jax.lax.fori_loop(0, n, step, a)
+    l = jnp.tril(a, -1) + jnp.eye(n, dtype=a.dtype)
+    u = jnp.triu(a)
+    return l.astype(block.dtype), u.astype(block.dtype)
+
+
+def _local_tri_inv(block: jax.Array, lower: bool) -> jax.Array:
+    f32 = block.astype(jnp.float32)
+    n = block.shape[0]
+    inv = jax.scipy.linalg.solve_triangular(
+        f32, jnp.eye(n, dtype=jnp.float32), lower=lower)
+    return inv.astype(block.dtype)
+
+
+def _leaf(a: BlockMatrix) -> _LU:
+    # 2 LU-class + 4 tri-inv + 3 multiply-class local O(bs^3) ops — the "9x"
+    # leaf work the paper attributes to the LU baseline (Table 1 row 1).
+    _bump("leaf_lu")
+    blk = a.blocks[0, 0]
+    l, u = _local_lu(blk)
+    linv = _local_tri_inv(l, lower=True)
+    uinv = _local_tri_inv(u, lower=False)
+    one = lambda x: BlockMatrix(x[None, None])
+    return _LU(one(l), one(u), one(linv), one(uinv))
+
+
+def block_lu(a: BlockMatrix) -> _LU:
+    b = a.grid
+    if b & (b - 1):
+        raise ValueError(f"grid must be a power of two, got {b}")
+    if b == 1:
+        return _leaf(a)
+
+    a11, a12, a21, a22 = a.split()
+    f11 = block_lu(a11)
+    u12 = multiply(f11.linv, a12)
+    l21 = multiply(a21, f11.uinv)
+    s = a22.subtract(multiply(l21, u12))
+    f22 = block_lu(s)
+
+    h = b // 2
+    zero = BlockMatrix.zeros(h, a.block_size, a.dtype)
+    l = BlockMatrix.arrange(f11.l, zero, l21, f22.l)
+    u = BlockMatrix.arrange(f11.u, u12, zero, f22.u)
+    linv21 = multiply(f22.linv, multiply(l21, f11.linv)).neg()
+    uinv12 = multiply(f11.uinv, multiply(u12, f22.uinv)).neg()
+    linv = BlockMatrix.arrange(f11.linv, zero, linv21, f22.linv)
+    uinv = BlockMatrix.arrange(f11.uinv, uinv12, zero, f22.uinv)
+    return _LU(l, u, linv, uinv)
+
+
+def _triangular_product(uinv: BlockMatrix, linv: BlockMatrix) -> BlockMatrix:
+    """A^{-1} = U^{-1} L^{-1} via 5 half-size multiplies (vs 8 naive).
+
+    [[Ui11,Ui12],[0,Ui22]] @ [[Li11,0],[Li21,Li22]] =
+      [[Ui11·Li11 + Ui12·Li21,  Ui12·Li22],
+       [Ui22·Li21,              Ui22·Li22]]
+    """
+    if uinv.grid == 1:
+        return multiply(uinv, linv)
+    u11, u12, _, u22 = uinv.split()
+    l11, _, l21, l22 = linv.split()
+    c11 = multiply(u11, l11).add(multiply(u12, l21))
+    c12 = multiply(u12, l22)
+    c21 = multiply(u22, l21)
+    c22 = multiply(u22, l22)
+    return BlockMatrix.arrange(c11, c12, c21, c22)
+
+
+def lu_inverse(a: BlockMatrix) -> BlockMatrix:
+    """Distributed LU-based inversion (the paper's comparison baseline)."""
+    f = block_lu(a)
+    return _triangular_product(f.uinv, f.linv)
+
+
+@functools.partial(jax.jit, static_argnames=("block_size",))
+def lu_inverse_dense(dense: jax.Array, block_size: int) -> jax.Array:
+    a = BlockMatrix.from_dense(dense, block_size)
+    return lu_inverse(a).to_dense()

@@ -1,0 +1,73 @@
+"""Sharded BlockMatrix I/O — the HDFS side of the paper's system.
+
+The paper's matrices live in HDFS as RDD partitions; each Spark executor
+reads its blocks. Here each HOST writes/reads only the grid rows it owns
+(`host_index` / `n_hosts`), so a 2^18-square matrix never transits a single
+machine. Layout on disk:
+
+    <dir>/meta.json                         n, block_size, grid, dtype
+    <dir>/row_<i>.npy                       one (grid, bs, bs) row of blocks
+
+Reads can target a DIFFERENT host count than writes (elastic, like the
+checkpoint re-shard path): rows are keyed by grid index, not by writer.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .blockmatrix import BlockMatrix
+
+__all__ = ["save_blockmatrix", "load_blockmatrix", "load_meta"]
+
+
+def _rows_for(host_index: int, n_hosts: int, grid: int) -> range:
+    per = (grid + n_hosts - 1) // n_hosts
+    return range(host_index * per, min((host_index + 1) * per, grid))
+
+
+def save_blockmatrix(directory: str, bm: BlockMatrix, *, host_index: int = 0,
+                     n_hosts: int = 1) -> None:
+    os.makedirs(directory, exist_ok=True)
+    if host_index == 0:
+        with open(os.path.join(directory, "meta.json"), "w") as f:
+            json.dump({"n": bm.n, "block_size": bm.block_size,
+                       "grid": bm.grid, "dtype": str(bm.dtype)}, f)
+    blocks = np.asarray(jax.device_get(bm.blocks))
+    if str(blocks.dtype) == "bfloat16":       # numpy-storable raw view
+        blocks = blocks.view(np.uint16)
+    for i in _rows_for(host_index, n_hosts, bm.grid):
+        tmp = os.path.join(directory, f"row_{i}.npy.tmp")
+        with open(tmp, "wb") as f:
+            np.save(f, blocks[i])
+        os.replace(tmp, os.path.join(directory, f"row_{i}.npy"))
+
+
+def load_meta(directory: str) -> dict:
+    with open(os.path.join(directory, "meta.json")) as f:
+        return json.load(f)
+
+
+def load_blockmatrix(directory: str, *, host_index: int = 0,
+                     n_hosts: int = 1, full: bool = True) -> BlockMatrix:
+    """full=True loads all rows (single-host tests); full=False loads only
+    this host's rows, zero-padding the rest (the sharded-ingest path — rows
+    get device_put to this host's devices and XLA assembles the global
+    array across hosts)."""
+    meta = load_meta(directory)
+    grid, bs = meta["grid"], meta["block_size"]
+    is_bf16 = meta["dtype"] == "bfloat16"
+    rows = np.zeros((grid, grid, bs, bs),
+                    np.uint16 if is_bf16 else meta["dtype"])
+    wanted = range(grid) if full else _rows_for(host_index, n_hosts, grid)
+    for i in wanted:
+        rows[i] = np.load(os.path.join(directory, f"row_{i}.npy"))
+    arr = jnp.asarray(rows)
+    if is_bf16:
+        arr = arr.view(jnp.bfloat16)
+    return BlockMatrix(arr)

@@ -1,0 +1,3 @@
+from .synthetic import TokenStream, input_specs, make_batch
+
+__all__ = ["TokenStream", "input_specs", "make_batch"]

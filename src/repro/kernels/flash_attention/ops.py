@@ -1,0 +1,22 @@
+"""Jit'd public wrapper for the Pallas flash attention forward."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import flash_attention_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, bq: int = 128, bk: int = 128
+                    ) -> jax.Array:
+    """Flash attention fwd (interpret mode off-TPU). Layout (B, H, S, hd)."""
+    return flash_attention_pallas(q, k, v, causal=causal, bq=bq, bk=bk,
+                                  interpret=not _on_tpu())

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True) -> jax.Array:
+    """Naive full-softmax attention. q: (B,H,S,hd); k,v: (B,KV,S,hd)."""
+    b, h, sq, hd = q.shape
+    n_kv = k.shape[1]
+    group = h // n_kv
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * hd ** -0.5
+    if causal:
+        i = jnp.arange(sq)[:, None]
+        j = jnp.arange(k.shape[2])[None, :]
+        s = jnp.where(i >= j, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,4 @@
+from . import ops, ref
+from .kernel import leaf_inverse_pallas
+
+__all__ = ["ops", "ref", "leaf_inverse_pallas"]

@@ -1,0 +1,23 @@
+"""Jit'd public wrappers for the Gauss-Jordan leaf inverse."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import leaf_inverse_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@jax.jit
+def leaf_inverse(block: jax.Array) -> jax.Array:
+    """Invert one (bs, bs) block (SPIN's Algorithm-2 leaf)."""
+    return leaf_inverse_pallas(block[None], interpret=not _on_tpu())[0]
+
+
+@jax.jit
+def batched_leaf_inverse(blocks: jax.Array) -> jax.Array:
+    """Invert (batch, bs, bs) blocks — one grid program per block."""
+    return leaf_inverse_pallas(blocks, interpret=not _on_tpu())

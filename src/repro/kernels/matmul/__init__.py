@@ -1,0 +1,4 @@
+from . import ops, ref
+from .kernel import matmul_pallas
+
+__all__ = ["ops", "ref", "matmul_pallas"]

@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: tiled MXU matmul with f32 accumulation.
+
+The per-device GEMM under every distributed BlockMatrix multiply — the
+compute hot-spot the paper identifies ("the primary bottleneck of inversion
+algorithm is matrix multiplications", §6).
+
+Tiling: grid (m/bm, n/bn, k/bk); A tiles (bm, bk) and B tiles (bk, bn) are
+staged HBM→VMEM by BlockSpec; the MXU sees (bm, bk)·(bk, bn) with bm/bn/bk
+multiples of 128 (systolic-array aligned). The k axis is the innermost,
+sequential grid dim: an (bm, bn) f32 VMEM scratch accumulator is revisited
+across k steps and cast to the output dtype on the last one.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["matmul_pallas", "DEFAULT_TILES"]
+
+DEFAULT_TILES = (128, 128, 128)  # (bm, bn, bk) — MXU-aligned
+
+
+def _matmul_kernel(a_ref, b_ref, out_ref, acc_ref, *, k_steps: int) -> None:
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tiles", "interpret"))
+def matmul_pallas(a: jax.Array, b: jax.Array,
+                  tiles: tuple[int, int, int] | None = None,
+                  interpret: bool = False) -> jax.Array:
+    """C = A @ B for (m, k) × (k, n); dims must divide the chosen tiles."""
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch {a.shape} x {b.shape}")
+    bm, bn, bk = tiles or DEFAULT_TILES
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    if m % bm or n % bn or k % bk:
+        raise ValueError(f"dims ({m},{n},{k}) must divide tiles ({bm},{bn},{bk})")
+    k_steps = k // bk
+
+    kernel = functools.partial(_matmul_kernel, k_steps=k_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,52 @@
+"""Jit'd public wrapper for the Pallas tiled matmul.
+
+Auto-selects interpret mode off-TPU so the same call sites run on CPU (tests)
+and TPU (production). `block_gemm` is the vmapped form used by BlockMatrix
+multiplies: it contracts a whole (bi, bk)×(bk, bj) block grid with one
+Pallas GEMM per output block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import matmul_pallas, DEFAULT_TILES
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("tiles",))
+def matmul(a: jax.Array, b: jax.Array,
+           tiles: tuple[int, int, int] | None = None) -> jax.Array:
+    """C = A @ B via the Pallas kernel (interpret mode off-TPU)."""
+    return matmul_pallas(a, b, tiles=tiles, interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("tiles",))
+def block_gemm(a_blocks: jax.Array, b_blocks: jax.Array,
+               tiles: tuple[int, int, int] | None = None) -> jax.Array:
+    """Grid contraction C[i,j] = Σ_k A[i,k]·B[k,j] with Pallas inner GEMMs.
+
+    a_blocks: (bi, bk, bs, bs); b_blocks: (bk, bj, bs, bs).
+    The k-sum stays in f32 regardless of input dtype.
+    """
+    bi, bk, bs, _ = a_blocks.shape
+    _, bj, _, _ = b_blocks.shape
+    mm = functools.partial(matmul_pallas, tiles=tiles, interpret=not _on_tpu())
+
+    # vmap over (i, j); lax.map over k to bound trace size, accumulate f32.
+    def one_pair(a_row, b_col):  # (bk, bs, bs), (bk, bs, bs)
+        def step(carry, ab):
+            a_blk, b_blk = ab
+            return carry + mm(a_blk, b_blk).astype(jnp.float32), None
+        init = jnp.zeros((bs, bs), jnp.float32)
+        out, _ = jax.lax.scan(step, init, (a_row, b_col))
+        return out.astype(a_blocks.dtype)
+
+    pairwise = jax.vmap(jax.vmap(one_pair, in_axes=(None, 1)), in_axes=(0, None))
+    return pairwise(a_blocks, b_blocks)

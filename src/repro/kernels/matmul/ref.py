@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the tiled matmul kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """f32-accumulating GEMM — the semantics the kernel must match."""
+    out = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    return out.astype(a.dtype)

@@ -1,0 +1,5 @@
+# NOTE: do not import dryrun here — it sets XLA_FLAGS at import time and
+# must only be imported as __main__ (or explicitly, before jax init).
+from .mesh import make_mesh_shape, make_production_mesh
+
+__all__ = ["make_mesh_shape", "make_production_mesh"]

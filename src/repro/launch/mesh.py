@@ -1,0 +1,39 @@
+"""Production mesh definitions.
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state — required because the dry-run must set
+XLA_FLAGS before any jax initialization.
+
+Single pod: (16, 16) = 256 chips, axes (data, model) — a v5e pod.
+Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model); the `pod`
+axis is pure data parallelism over DCN (gradient all-reduce only).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+__all__ = ["make_production_mesh", "make_mesh_shape"]
+
+
+def make_mesh_shape(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return shape, axes
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape, axes = make_mesh_shape(multi_pod=multi_pod)
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)}; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "BEFORE importing jax (launch/dryrun.py does this)")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes),
+                         devices=devices)

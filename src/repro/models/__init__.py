@@ -1,0 +1,3 @@
+from . import attention, layers, moe, ssm, transformer
+
+__all__ = ["attention", "layers", "moe", "ssm", "transformer"]

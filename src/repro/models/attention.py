@@ -1,0 +1,209 @@
+"""Attention: GQA with chunked (memory-efficient) softmax, SWA, KV-cache.
+
+Training/prefill uses an online-softmax scan over KV chunks (Rabe & Staats
+style) so 32k×32k score matrices never materialize — peak per-pair scores are
+(B, H, q_chunk, kv_chunk) f32. Causality/sliding windows are chunk-masked;
+fully-masked chunk pairs are still computed (exact-but-wasteful baseline —
+the triangular chunk schedule is a §Perf hillclimb item).
+
+Decode takes one query token against a (B, S, KV, hd) cache — plain einsum,
+with the cache's S dim shardable over the model axis (flash-decoding layout;
+XLA inserts the partial-softmax collectives).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ArchConfig
+from repro.parallel.sharding import ShardingRules, DEFAULT_RULES, shard
+from . import scan_util
+from .layers import ParamDef, rotary
+
+__all__ = ["attn_params", "attn_apply", "attn_decode"]
+
+NEG_INF = -1e30
+
+
+def attn_params(cfg: ArchConfig) -> dict:
+    d, q = cfg.d_model, cfg.n_heads * cfg.head_dim
+    kv = cfg.n_kv_heads * cfg.head_dim
+    return {
+        "wq": ParamDef((d, q), ("embed_w", "heads")),
+        "wk": ParamDef((d, kv), ("embed_w", "kv_heads")),
+        "wv": ParamDef((d, kv), ("embed_w", "kv_heads")),
+        "wo": ParamDef((q, d), ("heads", "embed_w")),
+    }
+
+
+def _split_heads(x: jax.Array, n_heads: int) -> jax.Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, -1)
+
+
+def _chunk_mask(q_pos: jax.Array, kv_pos: jax.Array, causal: bool,
+                window: int) -> jax.Array:
+    """(q_chunk, kv_chunk) additive mask from absolute positions."""
+    rel = q_pos[:, None] - kv_pos[None, :]
+    ok = jnp.ones(rel.shape, bool)
+    if causal:
+        ok &= rel >= 0
+    if window:
+        ok &= rel < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _kv_band(qi: int, q_chunk: int, kv_chunk: int, nkv: int, causal: bool,
+             window: int) -> tuple[int, int]:
+    """Static [start, end) kv-chunk range a q-chunk can attend to.
+
+    Fully-masked chunk pairs are never computed — causal attention does the
+    triangle only (~2× fewer FLOPs than the all-pairs scan), sliding-window
+    does an O(window) band (linear in S, which is what makes hymba's SWA
+    genuinely sub-quadratic here)."""
+    if not causal:
+        return 0, nkv
+    q_lo, q_hi = qi * q_chunk, (qi + 1) * q_chunk - 1
+    end = min(nkv, (q_hi // kv_chunk) + 1)
+    start = 0
+    if window:
+        start = max(0, (q_lo - window + 1) // kv_chunk)
+    return start, end
+
+
+def _attend_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
+                    window: int, q_chunk: int, kv_chunk: int) -> jax.Array:
+    """q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd) -> (B, Sq, H, hd).
+
+    ONE online-softmax scan over the static list of live (q-chunk, kv-chunk)
+    pairs. Fully-masked pairs never enter the list, so causal costs the
+    triangle only and sliding-window costs an O(window) band — and because
+    it is a single while loop (not one per q chunk), the XLA SPMD
+    partitioner bug hit by same-body/different-trip-count loop families is
+    avoided. Peak memory: the (nq·B·H·qc) f32 accumulator (≈ the output) +
+    one (qc, kc) score block."""
+    b, sq, h, hd = q.shape
+    _, skv, n_kv, _ = k.shape
+    group = h // n_kv
+    scale = hd ** -0.5
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    nq, nkv = sq // q_chunk, skv // kv_chunk
+
+    qc_all = q.reshape(b, nq, q_chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(b, nkv, kv_chunk, n_kv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nkv, kv_chunk, n_kv, hd).transpose(1, 0, 2, 3, 4)
+
+    pairs = [(qi, kj) for qi in range(nq)
+             for kj in range(*_kv_band(qi, q_chunk, kv_chunk, nkv, causal,
+                                       window))]
+    qis = jnp.asarray([p[0] for p in pairs], jnp.int32)
+    kjs = jnp.asarray([p[1] for p in pairs], jnp.int32)
+
+    def step(carry, pk):
+        acc, m, l = carry          # (nq, B, H, qc, hd) f32, (nq, B, H, qc) ×2
+        qi, kj = pk
+        q_blk = jax.lax.dynamic_index_in_dim(qc_all, qi, 0, keepdims=False)
+        k_blk = jax.lax.dynamic_index_in_dim(kc, kj, 0, keepdims=False)
+        v_blk = jax.lax.dynamic_index_in_dim(vc, kj, 0, keepdims=False)
+        q_pos = qi * q_chunk + jnp.arange(q_chunk)
+        kv_pos = kj * kv_chunk + jnp.arange(kv_chunk)
+        mask = _chunk_mask(q_pos, kv_pos, causal, window)
+        # grouped scores (B, KV, group, qc, kc) -> (B, H, qc, kc) f32
+        s = jnp.einsum("bqgrd,bkgd->bgrqk",
+                       q_blk.reshape(b, q_chunk, n_kv, group, hd), k_blk,
+                       preferred_element_type=jnp.float32
+                       ).reshape(b, h, q_chunk, kv_chunk) * scale
+        s = s + mask[None, None]
+        m_i = jax.lax.dynamic_index_in_dim(m, qi, 0, keepdims=False)
+        l_i = jax.lax.dynamic_index_in_dim(l, qi, 0, keepdims=False)
+        acc_i = jax.lax.dynamic_index_in_dim(acc, qi, 0, keepdims=False)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_i - m_new)
+        l_new = l_i * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bgrqk,bkgd->bgrqd",
+                        p.reshape(b, n_kv, group, q_chunk, kv_chunk), v_blk,
+                        preferred_element_type=jnp.float32
+                        ).reshape(b, h, q_chunk, hd)
+        acc_new = acc_i * corr[..., None] + pv
+        upd = lambda buf, val: jax.lax.dynamic_update_index_in_dim(
+            buf, val, qi, 0)
+        return (upd(acc, acc_new), upd(m, m_new), upd(l, l_new)), None
+
+    acc0 = jnp.zeros((nq, b, h, q_chunk, hd), jnp.float32)
+    m0 = jnp.full((nq, b, h, q_chunk), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((nq, b, h, q_chunk), jnp.float32)
+    (acc, _, l), _ = scan_util.scan(step, (acc0, m0, l0), (qis, kjs))
+    out = acc / jnp.maximum(l[..., None], 1e-30)            # (nq,B,H,qc,hd)
+    out = out.transpose(1, 0, 3, 2, 4).reshape(b, sq, h, hd)
+    return out.astype(q.dtype)
+
+
+def attn_apply(params: dict, x: jax.Array, cfg: ArchConfig,
+               positions: Optional[jax.Array] = None,
+               rules: ShardingRules = DEFAULT_RULES,
+               q_chunk: int = 0, kv_chunk: int = 0) -> jax.Array:
+    """Full-sequence attention (train / prefill). x: (B, S, d)."""
+    q_chunk = q_chunk or cfg.attn_q_chunk
+    kv_chunk = kv_chunk or cfg.attn_kv_chunk
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q = _split_heads(jnp.einsum("bsd,dq->bsq", x, params["wq"]), cfg.n_heads)
+    k = _split_heads(jnp.einsum("bsd,dk->bsk", x, params["wk"]), cfg.n_kv_heads)
+    v = _split_heads(jnp.einsum("bsd,dk->bsk", x, params["wv"]), cfg.n_kv_heads)
+    q = rotary(q, positions, cfg.rope_theta)
+    k = rotary(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "heads", None, rules=rules)
+    k = shard(k, "batch", "seq", "kv_heads", None, rules=rules)
+    out = _attend_chunked(q, k, v, causal=cfg.causal,
+                          window=cfg.sliding_window,
+                          q_chunk=q_chunk, kv_chunk=kv_chunk)
+    out = shard(out, "batch", "seq", "heads", None, rules=rules)
+    return jnp.einsum("bsq,qd->bsd", out.reshape(b, s, -1), params["wo"])
+
+
+def attn_decode(params: dict, x: jax.Array, cache_k: jax.Array,
+                cache_v: jax.Array, pos: jax.Array, cfg: ArchConfig,
+                rules: ShardingRules = DEFAULT_RULES
+                ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode. x: (B, 1, d); cache_{k,v}: (B, S, KV, hd);
+    pos: (B,) current position. Returns (out, new_k, new_v)."""
+    b = x.shape[0]
+    s_max = cache_k.shape[1]
+    q = _split_heads(jnp.einsum("bsd,dq->bsq", x, params["wq"]), cfg.n_heads)
+    k = _split_heads(jnp.einsum("bsd,dk->bsk", x, params["wk"]), cfg.n_kv_heads)
+    v = _split_heads(jnp.einsum("bsd,dk->bsk", x, params["wv"]), cfg.n_kv_heads)
+    q = rotary(q, pos[:, None], cfg.rope_theta)
+    k = rotary(k, pos[:, None], cfg.rope_theta)
+
+    if cfg.sliding_window and s_max <= cfg.sliding_window:
+        # rolling cache: overwrite slot pos % window
+        slot = (pos % s_max)
+    else:
+        slot = pos
+    onehot = jax.nn.one_hot(slot, s_max, dtype=cache_k.dtype)   # (B, S)
+    new_k = cache_k * (1 - onehot)[..., None, None] \
+        + onehot[..., None, None] * k
+    new_v = cache_v * (1 - onehot)[..., None, None] \
+        + onehot[..., None, None] * v
+
+    group = cfg.n_heads // cfg.n_kv_heads
+    scale = cfg.head_dim ** -0.5
+    s = jnp.einsum("bqgrd,bkgd->bgrk",
+                   q.reshape(b, 1, cfg.n_kv_heads, group, cfg.head_dim),
+                   new_k, preferred_element_type=jnp.float32) * scale
+    # mask out unwritten/future slots (a rolled cache is fully valid once
+    # pos has wrapped past the window)
+    kv_idx = jnp.arange(s_max)
+    valid = (kv_idx[None] <= pos[:, None]) | (pos[:, None] >= s_max)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrk,bkgd->bgrd", p, new_v,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, cfg.n_heads * cfg.head_dim).astype(x.dtype)
+    return jnp.einsum("bsq,qd->bsd", out, params["wo"]), new_k, new_v

@@ -1,0 +1,140 @@
+"""Shared layer primitives: param declaration, norms, rotary, dense MLP."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import ShardingRules, DEFAULT_RULES, shard
+
+__all__ = ["ParamDef", "init_tree", "abstract_tree", "spec_tree",
+           "norm_apply", "norm_params", "rotary", "mlp_params", "mlp_apply",
+           "DTYPE", "PARAM_DTYPE"]
+
+DTYPE = jnp.bfloat16        # activation dtype
+PARAM_DTYPE = jnp.bfloat16  # stored parameter dtype (master copy lives in opt)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    """Declarative parameter: shape + logical axes + initializer scale."""
+    shape: tuple[int, ...]
+    logical: tuple[Optional[str], ...]
+    init: str = "normal"      # normal | zeros | ones
+    scale: float = 0.02
+    dtype: object = None      # defaults to PARAM_DTYPE
+
+    def initializer(self) -> Callable[[jax.Array], jax.Array]:
+        dt = self.dtype or PARAM_DTYPE
+        if self.init == "zeros":
+            return lambda key: jnp.zeros(self.shape, dt)
+        if self.init == "ones":
+            return lambda key: jnp.ones(self.shape, dt)
+        scale = self.scale
+        return lambda key: (scale * jax.random.normal(
+            key, self.shape, jnp.float32)).astype(dt)
+
+
+def _map_defs(defs, fn):
+    return jax.tree.map(fn, defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def init_tree(defs, key: jax.Array):
+    """Materialize a pytree of ParamDefs into arrays (smoke tests/examples)."""
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, len(leaves))
+    vals = [d.initializer()(k) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_tree(defs):
+    """ShapeDtypeStruct pytree — dry-run stand-in, no allocation."""
+    return _map_defs(defs, lambda d: jax.ShapeDtypeStruct(
+        d.shape, d.dtype or PARAM_DTYPE))
+
+
+def spec_tree(defs, rules: ShardingRules = DEFAULT_RULES, mesh=None):
+    """PartitionSpec pytree resolved against `mesh`."""
+    from repro.parallel.sharding import logical_spec
+    return _map_defs(defs, lambda d: logical_spec(d.shape, d.logical, rules,
+                                                  mesh))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_params(kind: str, d: int) -> dict:
+    if kind == "rmsnorm":
+        return {"scale": ParamDef((d,), (None,), init="ones")}
+    if kind == "layernorm":
+        return {"scale": ParamDef((d,), (None,), init="ones"),
+                "bias": ParamDef((d,), (None,), init="zeros")}
+    if kind == "nonparam_ln":
+        return {}
+    raise ValueError(f"unknown norm {kind!r}")
+
+
+def norm_apply(kind: str, params: dict, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        rms = jnp.sqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + 1e-6)
+        out = xf / rms * params["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+        if kind == "layernorm":
+            out = out * params["scale"].astype(jnp.float32) \
+                + params["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rotary(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd) with positions (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    # angles: (..., S, 1, half), broadcast over the heads dim
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_params(d: int, f: int, activation: str) -> dict:
+    p = {"wi": ParamDef((d, f), ("embed_w", "ffn")),
+         "wo": ParamDef((f, d), ("ffn", "embed_w"))}
+    if activation == "swiglu":
+        p["wg"] = ParamDef((d, f), ("embed_w", "ffn"))
+    return p
+
+
+def mlp_apply(params: dict, x: jax.Array, activation: str,
+              rules: ShardingRules = DEFAULT_RULES) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, params["wi"])
+    if activation == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, params["wg"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * h
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    h = shard(h, "batch", "seq", "ffn", rules=rules)
+    return jnp.einsum("bsf,fd->bsd", h, params["wo"])

@@ -1,0 +1,235 @@
+"""Expert-parallel MoE with explicit all_to_all dispatch (shard_map).
+
+Experts are sharded over the `model` mesh axis (EP); tokens are sharded over
+the batch axes (DP). Dispatch is the production pattern (GShard/DeepSpeed
+style) rather than a dense one-hot einsum — the (tokens, E, C) dispatch
+tensor would be O(tokens²) at our shapes:
+
+  1. router top-k on local tokens; destination shard = expert // E_loc
+  2. capacity-C send buffers (M, C, d) filled by scatter (position =
+     running count per destination, computed with a one-hot cumsum)
+  3. `lax.all_to_all` over the model axis  → each shard receives the tokens
+     for its local experts
+  4. second-level scatter into (E_loc, C2, d) per-expert buffers, grouped
+     GEMM `ecd,edf->ecf`, gather back
+  5. reverse all_to_all + gate-weighted combine (dropped tokens fall back to
+     the residual stream, standard capacity-drop semantics)
+
+Inside shard_map all scatters/gathers are shard-local, so XLA never sees a
+global scatter (which it would replicate). Expert weights are additionally
+FSDP-sharded over `data` and all-gathered per layer inside the scan body —
+backward turns that into the reduce-scatter of weight grads automatically.
+
+Aux outputs: Switch-style load-balance loss + router z-loss.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import ArchConfig, MoEConfig
+from repro.parallel.sharding import ShardingRules, DEFAULT_RULES
+from .layers import ParamDef
+
+__all__ = ["moe_params", "moe_apply"]
+
+
+def _padded_experts(moe: MoEConfig, model_size: int) -> int:
+    return math.ceil(moe.num_experts / model_size) * model_size
+
+
+def moe_params(cfg: ArchConfig, model_size_hint: int = 16) -> dict:
+    """Weight table. E is padded to the model-axis multiple so EP divides
+    evenly; the router masks the phantom experts (see DESIGN.md §7)."""
+    moe, d = cfg.moe, cfg.d_model
+    e_pad = _padded_experts(moe, model_size_hint)
+    f = moe.d_ff_expert
+    p = {
+        "router": ParamDef((d, e_pad), (None, None), scale=0.02,
+                           dtype=jnp.float32),
+        "wi": ParamDef((e_pad, d, f), ("experts", "embed_w", None)),
+        "wg": ParamDef((e_pad, d, f), ("experts", "embed_w", None)),
+        "wo": ParamDef((e_pad, f, d), ("experts", None, "embed_w")),
+    }
+    if moe.num_shared_experts:
+        fs = moe.shared_d_ff
+        p["shared"] = {
+            "wi": ParamDef((d, fs), (None, "ffn")),
+            "wg": ParamDef((d, fs), (None, "ffn")),
+            "wo": ParamDef((fs, d), ("ffn", None)),
+        }
+    return p
+
+
+def _positions_by_dest(dest_flat: jax.Array, n_dest: int) -> jax.Array:
+    """Running per-destination slot index for each row (one-hot cumsum)."""
+    oh = jax.nn.one_hot(dest_flat, n_dest, dtype=jnp.int32)
+    return jnp.take_along_axis(
+        jnp.cumsum(oh, axis=0) - 1,
+        jnp.clip(dest_flat, 0, n_dest - 1)[:, None], axis=1)[:, 0]
+
+
+def _moe_local(x_loc, router_w, wi, wg, wo, shared, *, cfg: ArchConfig,
+               model_axis: Optional[str], data_axis: Optional[str],
+               batch_axes: tuple[str, ...] = ()):
+    """Per-shard MoE body. Works standalone (M=1) and inside shard_map."""
+    moe = cfg.moe
+    m_size = jax.lax.axis_size(model_axis) if model_axis else 1
+    e_pad = wi.shape[0] * m_size
+    e_loc = wi.shape[0]
+    bsz, s, d = x_loc.shape
+    t = bsz * s
+    k = moe.top_k
+
+    # FSDP: expert weights arrive d-sharded over `data`; gather before use.
+    if data_axis:
+        wi = jax.lax.all_gather(wi, data_axis, axis=1, tiled=True)
+        wg = jax.lax.all_gather(wg, data_axis, axis=1, tiled=True)
+        wo = jax.lax.all_gather(wo, data_axis, axis=2, tiled=True)
+
+    tokens = x_loc.reshape(t, d)
+    logits = tokens.astype(jnp.float32) @ router_w.astype(jnp.float32)
+    e_idx = jnp.arange(e_pad)
+    logits = jnp.where(e_idx[None, :] < moe.num_experts, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k)                      # (t, k)
+    gate = gate / jnp.maximum(jnp.sum(gate, axis=-1, keepdims=True), 1e-9)
+
+    # ---- first-level dispatch: tokens -> destination model shards --------
+    cap = max(8, int(moe.capacity_factor * t * k / max(m_size, 1)))
+    dest = eidx // e_loc                                      # (t, k)
+    leidx = eidx % e_loc
+    pos = _positions_by_dest(dest.reshape(-1), m_size).reshape(t, k)
+    pos = jnp.where(pos < cap, pos, cap)                      # OOB -> drop
+    dropped = pos >= cap
+
+    send_x = jnp.zeros((m_size, cap, d), x_loc.dtype)
+    send_le = jnp.full((m_size, cap), e_loc, jnp.int32)       # OOB marker
+    for j in range(k):
+        send_x = send_x.at[dest[:, j], pos[:, j]].set(tokens, mode="drop")
+        send_le = send_le.at[dest[:, j], pos[:, j]].set(leidx[:, j],
+                                                        mode="drop")
+    if model_axis and m_size > 1:
+        recv_x = jax.lax.all_to_all(send_x, model_axis, 0, 0)
+        recv_le = jax.lax.all_to_all(send_le, model_axis, 0, 0)
+    else:
+        recv_x, recv_le = send_x, send_le
+
+    # ---- second-level dispatch: received rows -> local expert buffers ----
+    rows = recv_x.reshape(m_size * cap, d)
+    rle = recv_le.reshape(m_size * cap)
+    if e_loc == 1:
+        cap2 = m_size * cap
+    else:
+        cap2 = max(8, int(2 * m_size * cap / e_loc))
+    pos2 = _positions_by_dest(rle, e_loc)
+    pos2 = jnp.where((rle < e_loc) & (pos2 < cap2), pos2, cap2)
+    buf = jnp.zeros((e_loc, cap2, d), x_loc.dtype)
+    buf = buf.at[jnp.clip(rle, 0, e_loc - 1), pos2].set(rows, mode="drop")
+
+    # ---- grouped expert FFN (swiglu) --------------------------------------
+    h = jnp.einsum("ecd,edf->ecf", buf, wi)
+    g = jnp.einsum("ecd,edf->ecf", buf, wg)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+    y = jnp.einsum("ecf,efd->ecd", h, wo)
+
+    # ---- gather back + reverse all_to_all + combine -----------------------
+    back_rows = y.at[jnp.clip(rle, 0, e_loc - 1), pos2].get(
+        mode="fill", fill_value=0)
+    back = back_rows.reshape(m_size, cap, d)
+    if model_axis and m_size > 1:
+        ret = jax.lax.all_to_all(back, model_axis, 0, 0)
+    else:
+        ret = back
+
+    out = jnp.zeros((t, d), jnp.float32)
+    for j in range(k):
+        got = ret.at[dest[:, j], pos[:, j]].get(mode="fill", fill_value=0)
+        w = jnp.where(dropped[:, j], 0.0, gate[:, j])
+        out = out + w[:, None] * got.astype(jnp.float32)
+
+    # ---- shared experts (dense, TP over model) ----------------------------
+    if shared is not None:
+        wi_s, wg_s, wo_s = shared["wi"], shared["wg"], shared["wo"]
+        hs = jnp.einsum("td,df->tf", tokens, wi_s)
+        gs = jnp.einsum("td,df->tf", tokens, wg_s)
+        hs = jax.nn.silu(gs.astype(jnp.float32)).astype(hs.dtype) * hs
+        ys = jnp.einsum("tf,fd->td", hs, wo_s).astype(jnp.float32)
+        if model_axis and m_size > 1:
+            ys = jax.lax.psum(ys, model_axis)
+        out = out + ys
+
+    # ---- aux losses --------------------------------------------------------
+    # Per-GROUP load-balance loss (each shard's token slice is a group, then
+    # pmean across groups) — GShard semantics; differs slightly from a
+    # global-mean Switch loss but balances at the granularity that matters
+    # for dispatch.
+    me = jnp.mean(probs, axis=0)                              # (E,)
+    one_hot_top1 = jax.nn.one_hot(eidx[:, 0], e_pad)
+    ce = jnp.mean(one_hot_top1, axis=0)
+    local_aux = moe.num_experts * jnp.sum(me * ce)
+    local_z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    if batch_axes:
+        local_aux = jax.lax.pmean(local_aux, batch_axes)
+        local_z = jax.lax.pmean(local_z, batch_axes)
+
+    return out.reshape(bsz, s, d).astype(x_loc.dtype), local_aux, local_z
+
+
+def moe_apply(params: dict, x: jax.Array, cfg: ArchConfig,
+              rules: ShardingRules = DEFAULT_RULES
+              ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, load_balance_aux, router_z_loss)."""
+    mesh = jax.sharding.get_abstract_mesh()
+    shared = params.get("shared")
+    if mesh is None or not mesh.shape or mesh.shape.get("model", 1) == 1:
+        return _moe_local(x, params["router"], params["wi"], params["wg"],
+                          params["wo"], shared, cfg=cfg, model_axis=None,
+                          data_axis=None)
+
+    axes = dict(mesh.shape)
+    batch_axes = tuple(a for a in ("pod", "data") if a in axes
+                       and x.shape[0] % axes[a] == 0)
+    # keep batch sharding only if the full tuple divides evenly
+    tot = math.prod([axes[a] for a in batch_axes]) if batch_axes else 1
+    if batch_axes and x.shape[0] % tot:
+        batch_axes = batch_axes[:1]
+    data_axis = "data" if ("data" in axes and axes["data"] > 1) else None
+
+    bspec = batch_axes if batch_axes else None
+    # Shard the SEQUENCE over `model` for dispatch: every device owns a
+    # distinct token slice (true EP). Without this each model shard would
+    # route identical copies of the whole local batch — M× redundant expert
+    # compute. Decode (seq==1) keeps seq replicated; its token count is tiny.
+    seq_axis = "model" if x.shape[1] % axes.get("model", 1) == 0 else None
+    reduce_axes = batch_axes + ((seq_axis,) if seq_axis else ())
+    shared_specs = None
+    if shared is not None:
+        shared_specs = {"wi": P(None, "model"), "wg": P(None, "model"),
+                        "wo": P("model", None)}
+
+    fn = functools.partial(_moe_local, cfg=cfg, model_axis="model",
+                           data_axis=data_axis, batch_axes=reduce_axes)
+    # check_vma=False: all_to_all/all_gather outputs are conservatively typed
+    # "varying" by the static checker; the dispatch round-trip returns each
+    # token to its owning shard and aux losses are pmean'd over the batch
+    # axes, so the declared out_specs hold by construction.
+    out, aux, z = jax.shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(P(bspec, seq_axis, None),                   # x
+                  P(None, None),                              # router
+                  P("model", data_axis, None),                # wi
+                  P("model", data_axis, None),                # wg
+                  P("model", None, data_axis),                # wo
+                  shared_specs),
+        out_specs=(P(bspec, seq_axis, None), P(), P()),
+        check_vma=False,
+    )(x, params["router"], params["wi"], params["wg"], params["wo"], shared)
+    return out, aux, z

@@ -1,0 +1,39 @@
+"""Scan wrapper with a probe-mode unroll flag.
+
+XLA's cost_analysis counts a while-loop body ONCE regardless of trip count,
+which silently undercounts every scanned computation (layers, attention KV
+chunks, SSD chunks, microbatches). The dry-run's roofline probes therefore
+trace inside `unroll_scans()`, turning every model scan into straight-line
+HLO that cost_analysis counts exactly. Production compiles keep rolled scans
+(small HLO, bounded activation memory).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+
+__all__ = ["scan", "unroll_scans", "unrolling"]
+
+_UNROLL: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "repro_unroll_scans", default=False)
+
+
+@contextlib.contextmanager
+def unroll_scans():
+    token = _UNROLL.set(True)
+    try:
+        yield
+    finally:
+        _UNROLL.reset(token)
+
+
+def unrolling() -> bool:
+    return _UNROLL.get()
+
+
+def scan(body, init, xs=None, length=None):
+    return jax.lax.scan(body, init, xs, length=length,
+                        unroll=True if _UNROLL.get() else 1)

@@ -1,0 +1,208 @@
+"""Mamba-2 SSD (state-space duality) block [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm: within a chunk of length Q
+the recurrence is expanded into an attention-like masked product (the
+"duality"); across chunks a (H, N, P) state is carried by a scan. Decode is
+the O(1) recurrent update. Block layout follows the Mamba-2 reference:
+
+    in_proj -> [z | xBC | dt];  causal depthwise conv on xBC;
+    split x (H·P), B (G·N), C (G·N);  SSD;  y·silu(z) gated RMSNorm;  out_proj
+
+TP: heads are sharded over the model axis when divisible (hymba: yes after
+padding; mamba2-130m's 24 heads on 16-way model fall back to replication —
+see DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ArchConfig, SSMConfig
+from repro.parallel.sharding import ShardingRules, DEFAULT_RULES, shard
+from . import scan_util
+from .layers import ParamDef
+
+__all__ = ["ssm_params", "ssm_apply", "ssm_decode", "SSMState"]
+
+
+class SSMState(NamedTuple):
+    h: jax.Array          # (B, H, N, P) recurrent state
+    conv: jax.Array       # (B, d_conv-1, conv_dim) rolling conv inputs
+
+
+def _dims(cfg: ArchConfig) -> tuple[int, int, int, int, int]:
+    s: SSMConfig = cfg.ssm
+    di = s.d_inner or 2 * cfg.d_model
+    n_heads = di // s.head_dim
+    conv_dim = di + 2 * s.state_size      # x, B, C all pass the conv (G=1)
+    return di, n_heads, s.head_dim, s.state_size, conv_dim
+
+
+def ssm_params(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    di, h, p, n, conv_dim = _dims(cfg)
+    return {
+        "wz": ParamDef((d, di), ("embed_w", "ssm_inner")),
+        "wxbc": ParamDef((d, conv_dim), ("embed_w", None)),
+        "wdt": ParamDef((d, h), ("embed_w", None)),
+        "dt_bias": ParamDef((h,), (None,), init="zeros"),
+        "a_log": ParamDef((h,), (None,), init="zeros"),   # A = -exp(a_log)
+        "d_skip": ParamDef((h,), (None,), init="ones"),
+        "conv_w": ParamDef((cfg.ssm.d_conv, conv_dim), (None, None),
+                           scale=0.1),
+        "norm_scale": ParamDef((di,), (None,), init="ones"),
+        "wo": ParamDef((di, d), ("ssm_inner", "embed_w")),
+    }
+
+
+def _causal_conv(xbc: jax.Array, conv_w: jax.Array,
+                 init: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv along seq. xbc: (B, S, C); conv_w: (K, C)."""
+    k = conv_w.shape[0]
+    if init is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = init
+    xpad = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xpad[:, i:i + xbc.shape[1], :] * conv_w[i][None, None]
+              for i in range(k))
+    return jax.nn.silu(out.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, scale: jax.Array) -> jax.Array:
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    rms = jnp.sqrt(jnp.mean(yf * yf, axis=-1, keepdims=True) + 1e-6)
+    return (yf / rms * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def _ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, b_in: jax.Array,
+                 c_in: jax.Array, chunk: int,
+                 h0: jax.Array | None = None,
+                 rules: ShardingRules = DEFAULT_RULES
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD. x: (B, S, H, P); dt: (B, S, H); a: (H,) negative;
+    b_in, c_in: (B, S, N). Returns (y, final_state (B, H, N, P)).
+
+    The intra-chunk work (the expensive "attention dual": the (Q, Q, H)
+    decay tensor and its einsums) is embarrassingly parallel across chunks,
+    so the chunk dim is explicitly sharded over `model` (`ssm_chunk` rule) —
+    head counts often don't divide the mesh (mamba2: 24, hymba: 50) and
+    leaving these tensors unconstrained lets the SPMD partitioner insert
+    pathological per-chunk all-reduces instead."""
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    q = min(chunk, s)
+    nc = s // q
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32))
+    log_a = dt * a[None, None, :]                       # (B, S, H)  ≤ 0
+    xdt = x.astype(jnp.float32) * dt[..., None]
+
+    # chunked views: (B, nc, Q, ...), chunk-sharded
+    ck = lambda t, *ax: shard(t, "batch", "ssm_chunk", *ax, rules=rules)
+    xc = ck(xdt.reshape(bsz, nc, q, h, p), None, None, None)
+    lac = ck(log_a.reshape(bsz, nc, q, h), None, None)
+    bc = ck(b_in.astype(jnp.float32).reshape(bsz, nc, q, n), None, None)
+    cc = ck(c_in.astype(jnp.float32).reshape(bsz, nc, q, n), None, None)
+
+    cum = jnp.cumsum(lac, axis=2)                       # (B, nc, Q, H)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q_i,Q_j,H)
+    iq = jnp.arange(q)
+    causal = (iq[:, None] >= iq[None, :])
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+
+    # intra-chunk ("attention" term): ((C Bᵀ) ⊙ L) X
+    cb = ck(jnp.einsum("bcin,bcjn->bcij", cc, bc), None, None)
+    y_intra = ck(jnp.einsum("bcij,bcijh,bcjhp->bcihp", cb, decay, xc),
+                 None, None, None)
+
+    # each chunk's contribution to the carried state
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)     # (B, nc, Q, H)
+    chunk_states = jnp.einsum("bcjn,bcjh,bcjhp->bchnp",
+                              bc, decay_to_end, xc)     # (B, nc, H, N, P)
+    chunk_decay = jnp.exp(jnp.sum(lac, axis=2))         # (B, nc, H)
+
+    # inter-chunk recurrence (scan over chunks)
+    def step(hprev, ins):
+        states, dec = ins                                # (B,H,N,P), (B,H)
+        hnew = hprev * dec[..., None, None] + states
+        return hnew, hprev
+
+    h_init = (jnp.zeros((bsz, h, n, p), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+    hlast, hprevs = scan_util.scan(
+        step, h_init,
+        (chunk_states.transpose(1, 0, 2, 3, 4),
+         chunk_decay.transpose(1, 0, 2)))
+    hprevs = hprevs.transpose(1, 0, 2, 3, 4)            # (B, nc, H, N, P)
+
+    # inter-chunk output: C_t · h_{chunk start} · decay(0..t)
+    decay_from_start = jnp.exp(cum)                     # (B, nc, Q, H)
+    y_inter = ck(jnp.einsum("bcin,bcih,bchnp->bcihp",
+                            cc, decay_from_start, hprevs), None, None, None)
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y.astype(x.dtype), hlast
+
+
+def ssm_apply(params: dict, x: jax.Array, cfg: ArchConfig,
+              rules: ShardingRules = DEFAULT_RULES,
+              h0: jax.Array | None = None, conv0: jax.Array | None = None
+              ) -> tuple[jax.Array, SSMState]:
+    """Full-sequence SSD. x: (B, S, d) -> (out, final SSMState)."""
+    bsz, s, _ = x.shape
+    di, h, p, n, conv_dim = _dims(cfg)
+    z = jnp.einsum("bsd,de->bse", x, params["wz"])
+    xbc = jnp.einsum("bsd,de->bse", x, params["wxbc"])
+    dt = jnp.einsum("bsd,dh->bsh", x, params["wdt"]) \
+        + params["dt_bias"].astype(jnp.float32)
+    xbc = _causal_conv(xbc, params["conv_w"], conv0)
+    xs, b_in, c_in = jnp.split(xbc, [di, di + n], axis=-1)
+    xs = shard(xs.reshape(bsz, s, h, p), "batch", "seq", "ssm_inner", None,
+               rules=rules)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    y, hlast = _ssd_chunked(xs, dt, a, b_in, c_in, cfg.ssm.chunk, h0=h0,
+                            rules=rules)
+    y = y + params["d_skip"].astype(y.dtype)[None, None, :, None] * xs
+    y = _gated_norm(y.reshape(bsz, s, di), z, params["norm_scale"])
+    out = jnp.einsum("bse,ed->bsd", y, params["wo"])
+    k = cfg.ssm.d_conv
+    conv_state = jnp.einsum("bsd,de->bse", x, params["wxbc"])[:, s - (k - 1):, :] \
+        if s >= k - 1 else jnp.zeros((bsz, k - 1, conv_dim), x.dtype)
+    return out, SSMState(h=hlast.astype(jnp.float32), conv=conv_state)
+
+
+def ssm_decode(params: dict, x: jax.Array, state: SSMState, cfg: ArchConfig
+               ) -> tuple[jax.Array, SSMState]:
+    """One-token recurrent update. x: (B, 1, d)."""
+    bsz = x.shape[0]
+    di, h, p, n, conv_dim = _dims(cfg)
+    z = jnp.einsum("bsd,de->bse", x, params["wz"])[:, 0]
+    xbc_new = jnp.einsum("bsd,de->bse", x, params["wxbc"])[:, 0]
+    dt = (jnp.einsum("bsd,dh->bsh", x, params["wdt"])[:, 0]
+          + params["dt_bias"].astype(jnp.float32))
+
+    # rolling conv state: window = last (k-1) inputs + current
+    window = jnp.concatenate([state.conv, xbc_new[:, None, :]], axis=1)
+    conv_w = params["conv_w"]
+    conv_out = jnp.sum(window * conv_w[None], axis=1)
+    xbc = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    xs, b_in, c_in = jnp.split(xbc, [di, di + n], axis=-1)
+    xs = xs.reshape(bsz, h, p).astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32))        # (B, H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a[None])                          # (B, H)
+    bn = b_in.astype(jnp.float32)                       # (B, N)
+    cn = c_in.astype(jnp.float32)
+    hnew = state.h * da[..., None, None] \
+        + jnp.einsum("bn,bhp->bhnp", bn, xs * dt[..., None])
+    y = jnp.einsum("bn,bhnp->bhp", cn, hnew)
+    y = y + params["d_skip"].astype(jnp.float32)[None, :, None] * xs
+    y = _gated_norm(y.reshape(bsz, di).astype(x.dtype), z,
+                    params["norm_scale"])
+    out = jnp.einsum("be,ed->bd", y, params["wo"])[:, None, :]
+    return out, SSMState(h=hnew, conv=window[:, 1:, :])

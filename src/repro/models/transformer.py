@@ -1,0 +1,353 @@
+"""Model assembly: scan-over-layers transformer covering all 6 families.
+
+One homogeneous layer body per architecture (dense / moe / ssm / hybrid /
+audio / vlm) scanned over stacked per-layer parameters — compile time and
+HLO size are O(1) in depth, which is what makes 88-layer × 512-way SPMD
+dry-runs tractable. The layer body is wrapped in jax.checkpoint (full remat:
+only the residual stream crosses layer boundaries).
+
+Entry points:
+  param_defs / init_params / abstract_params / param_specs
+  forward(...)            train/prefill logits (+ MoE aux losses, + cache)
+  loss_fn(...)            next-token CE (masked-frame CE for hubert)
+  init_cache / abstract_cache
+  decode_step(...)        one token, updating KV/SSM caches
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ArchConfig
+from repro.parallel.sharding import ShardingRules, DEFAULT_RULES, shard
+from . import attention, moe as moe_mod, scan_util, ssm as ssm_mod
+from .embedding import embed_lookup
+from .layers import (DTYPE, ParamDef, abstract_tree, init_tree, mlp_apply,
+                     mlp_params, norm_apply, norm_params, spec_tree)
+
+__all__ = ["param_defs", "init_params", "abstract_params", "param_specs",
+           "forward", "loss_fn", "init_cache", "abstract_cache",
+           "decode_step", "prefill"]
+
+
+# ---------------------------------------------------------------------------
+# Parameter declaration
+# ---------------------------------------------------------------------------
+
+
+def _layer_defs(cfg: ArchConfig, model_size_hint: int) -> dict:
+    d = cfg.d_model
+    p: dict = {}
+    if not cfg.attn_free:
+        p["attn"] = attention.attn_params(cfg)
+        p["attn_norm"] = norm_params(cfg.norm, d)
+    if cfg.ssm is not None:
+        p["ssm"] = ssm_mod.ssm_params(cfg)
+        if cfg.attn_free:
+            p["ssm_norm"] = norm_params(cfg.norm, d)
+    if cfg.d_ff:
+        p["mlp"] = mlp_params(d, cfg.d_ff, cfg.activation)
+        p["mlp_norm"] = norm_params(cfg.norm, d)
+    if cfg.moe is not None:
+        p["moe"] = moe_mod.moe_params(cfg, model_size_hint)
+        p["moe_norm"] = norm_params(cfg.norm, d)
+    return p
+
+
+def _stack_defs(defs: dict, n: int) -> dict:
+    """Prepend the layers dim to every ParamDef (scan-stacked weights)."""
+    def stack(d: ParamDef) -> ParamDef:
+        return dataclasses.replace(d, shape=(n, *d.shape),
+                                   logical=("layers", *d.logical))
+    return jax.tree.map(stack, defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def param_defs(cfg: ArchConfig, model_size_hint: int = 16) -> dict:
+    d = cfg.d_model
+    defs: dict = {
+        "embed": ParamDef((cfg.vocab, d), ("vocab", "embed_w")),
+        "layers": _stack_defs(_layer_defs(cfg, model_size_hint), cfg.n_layers),
+        "final_norm": norm_params(cfg.norm, d),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((d, cfg.vocab), ("embed_w", "vocab"))
+    if cfg.family == "audio":
+        defs["mask_embed"] = ParamDef((d,), (None,))
+    return defs
+
+
+def init_params(cfg: ArchConfig, key: jax.Array,
+                model_size_hint: int = 16):
+    return init_tree(param_defs(cfg, model_size_hint), key)
+
+
+def abstract_params(cfg: ArchConfig, model_size_hint: int = 16):
+    return abstract_tree(param_defs(cfg, model_size_hint))
+
+
+def param_specs(cfg: ArchConfig, rules: ShardingRules = DEFAULT_RULES,
+                mesh=None, model_size_hint: int = 16):
+    return spec_tree(param_defs(cfg, model_size_hint), rules, mesh)
+
+
+# ---------------------------------------------------------------------------
+# Layer body (shared by train / prefill; decode has its own)
+# ---------------------------------------------------------------------------
+
+
+def _norm(cfg, params, name, x):
+    return norm_apply(cfg.norm, params.get(name, {}), x)
+
+
+def _layer_fwd(cfg: ArchConfig, rules: ShardingRules, lp: dict, x: jax.Array,
+               positions: jax.Array, want_cache: bool):
+    """Returns (x, aux, z, cache_slice)."""
+    aux = jnp.zeros((), jnp.float32)
+    z = jnp.zeros((), jnp.float32)
+    cache: dict = {}
+    if cfg.family == "hybrid":
+        h = _norm(cfg, lp, "attn_norm", x)
+        a_out = attention.attn_apply(lp["attn"], h, cfg, positions, rules)
+        s_out, ssm_state = ssm_mod.ssm_apply(lp["ssm"], h, cfg, rules)
+        x = x + 0.5 * (a_out + s_out)
+        if want_cache:
+            cache["ssm_h"], cache["ssm_conv"] = ssm_state.h, ssm_state.conv
+            cache.update(_kv_of(lp, h, cfg, positions))
+    elif not cfg.attn_free:
+        h = _norm(cfg, lp, "attn_norm", x)
+        x = x + attention.attn_apply(lp["attn"], h, cfg, positions, rules)
+        if want_cache:
+            cache.update(_kv_of(lp, h, cfg, positions))
+    if cfg.ssm is not None and cfg.family != "hybrid":
+        h = _norm(cfg, lp, "ssm_norm", x)
+        s_out, ssm_state = ssm_mod.ssm_apply(lp["ssm"], h, cfg, rules)
+        x = x + s_out
+        if want_cache:
+            cache["ssm_h"], cache["ssm_conv"] = ssm_state.h, ssm_state.conv
+    if cfg.d_ff:
+        h = _norm(cfg, lp, "mlp_norm", x)
+        x = x + mlp_apply(lp["mlp"], h, cfg.activation, rules)
+    if cfg.moe is not None:
+        h = _norm(cfg, lp, "moe_norm", x)
+        m_out, aux, z = moe_mod.moe_apply(lp["moe"], h, cfg, rules)
+        x = x + m_out
+    x = shard(x, "batch", "seq", "embed", rules=rules)
+    return x, aux, z, cache
+
+
+def _kv_of(lp: dict, h: jax.Array, cfg: ArchConfig, positions: jax.Array
+           ) -> dict:
+    """Recompute rotated K/V for the prefill cache (CSE'd with attn_apply)."""
+    from .layers import rotary
+    b, s, _ = h.shape
+    k = jnp.einsum("bsd,dk->bsk", h, lp["attn"]["wk"]).reshape(
+        b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = jnp.einsum("bsd,dk->bsk", h, lp["attn"]["wv"]).reshape(
+        b, s, cfg.n_kv_heads, cfg.head_dim)
+    k = rotary(k, positions, cfg.rope_theta)
+    return {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, batch: dict, cfg: ArchConfig,
+                  rules: ShardingRules) -> tuple[jax.Array, jax.Array]:
+    """Token/frontend embedding. Returns (x, positions)."""
+    if cfg.family == "audio":
+        x = batch["frame_embeds"].astype(DTYPE)            # (B, S, d) stub
+        mask = batch["mask"][..., None]
+        x = jnp.where(mask, params["mask_embed"].astype(DTYPE), x)
+    elif cfg.family == "vlm":
+        txt = embed_lookup(params["embed"], batch["tokens"])
+        img = batch["patch_embeds"].astype(DTYPE)          # (B, P, d) stub
+        x = jnp.concatenate([img, txt], axis=1)
+    else:
+        x = embed_lookup(params["embed"], batch["tokens"])
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = shard(x.astype(DTYPE), "batch", "seq", "embed", rules=rules)
+    return x, positions
+
+
+def _logits(params, x: jax.Array, cfg: ArchConfig,
+            rules: ShardingRules) -> jax.Array:
+    x = norm_apply(cfg.norm, params["final_norm"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head,
+                        preferred_element_type=jnp.float32)
+    return shard(logits, "batch", "seq", "vocab", rules=rules)
+
+
+REMAT_POLICIES = {
+    "full": None,                       # save only the residual stream
+    "dots": "dots_with_no_batch_dims_saveable",   # keep GEMM outputs
+}
+
+
+def forward(params, batch: dict, cfg: ArchConfig,
+            rules: ShardingRules = DEFAULT_RULES, *, want_cache: bool = False,
+            remat: bool = True, remat_policy: str = "full"):
+    """Full-sequence forward. Returns (logits, aux, z, cache|None)."""
+    x, positions = _embed_inputs(params, batch, cfg, rules)
+
+    def body(x, lp):
+        x, aux, z, cache = _layer_fwd(cfg, rules, lp, x, positions,
+                                      want_cache)
+        return x, (aux, z, cache)
+
+    if remat:
+        pol_name = REMAT_POLICIES.get(remat_policy)
+        policy = getattr(jax.checkpoint_policies, pol_name) if pol_name \
+            else None
+        body_fn = jax.checkpoint(body, policy=policy)
+    else:
+        body_fn = body
+    x, (auxs, zs, caches) = scan_util.scan(body_fn, x, params["layers"])
+    logits = _logits(params, x, cfg, rules)
+    cache = None
+    if want_cache:
+        cache = dict(caches)
+        cache["pos"] = jnp.full((x.shape[0],), x.shape[1], jnp.int32)
+    return logits, jnp.sum(auxs), jnp.sum(zs), cache
+
+
+def loss_fn(params, batch: dict, cfg: ArchConfig,
+            rules: ShardingRules = DEFAULT_RULES, *,
+            aux_weight: float = 0.01, z_weight: float = 1e-3,
+            remat: bool = True, remat_policy: str = "full"):
+    """Next-token CE (audio: masked-frame CE on mask positions)."""
+    logits, aux, z, _ = forward(params, batch, cfg, rules, remat=remat,
+                                remat_policy=remat_policy)
+    labels = batch["labels"]
+    if cfg.family == "vlm":
+        # loss only on text positions; image prefix carries no labels
+        pad = jnp.full(batch["patch_embeds"].shape[:2], -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    mask = (labels >= 0)
+    if cfg.family == "audio":
+        mask = mask & batch["mask"]
+    safe = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    token_ll = jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(mask), 1)
+    ce = -jnp.sum(jnp.where(mask, token_ll, 0.0)) / denom
+    total = ce + aux_weight * aux + z_weight * z
+    return total, {"ce": ce, "aux": aux, "z": z,
+                   "tokens": jnp.sum(mask).astype(jnp.float32)}
+
+
+def prefill(params, batch: dict, cfg: ArchConfig,
+            rules: ShardingRules = DEFAULT_RULES):
+    """Prefill forward: logits + populated cache (inference).
+
+    remat=False: no gradients flow at inference, and the extra
+    jax.checkpoint nesting both wastes recompute and trips an XLA SPMD
+    verifier bug when it wraps variable-length KV-band scans."""
+    return forward(params, batch, cfg, rules, want_cache=True, remat=False)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def _cache_defs(cfg: ArchConfig, batch: int, seq_len: int) -> dict:
+    """ShapeDtypeStructs for the decode cache (also the init template)."""
+    l = cfg.n_layers
+    defs: dict = {"pos": jax.ShapeDtypeStruct((batch,), jnp.int32)}
+    if not cfg.attn_free:
+        s_eff = min(seq_len, cfg.sliding_window) if cfg.sliding_window \
+            else seq_len
+        kv_shape = (l, batch, s_eff, cfg.n_kv_heads, cfg.head_dim)
+        defs["k"] = jax.ShapeDtypeStruct(kv_shape, DTYPE)
+        defs["v"] = jax.ShapeDtypeStruct(kv_shape, DTYPE)
+    if cfg.ssm is not None:
+        s = cfg.ssm
+        di = s.d_inner or 2 * cfg.d_model
+        h = di // s.head_dim
+        conv_dim = di + 2 * s.state_size
+        defs["ssm_h"] = jax.ShapeDtypeStruct(
+            (l, batch, h, s.state_size, s.head_dim), jnp.float32)
+        defs["ssm_conv"] = jax.ShapeDtypeStruct(
+            (l, batch, s.d_conv - 1, conv_dim), DTYPE)
+    return defs
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, seq_len: int) -> dict:
+    return _cache_defs(cfg, batch, seq_len)
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int) -> dict:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        _cache_defs(cfg, batch, seq_len))
+
+
+def cache_specs(cfg: ArchConfig, batch: int, seq_len: int,
+                rules: ShardingRules = DEFAULT_RULES, mesh=None) -> dict:
+    from repro.parallel.sharding import logical_spec
+    logical = {"pos": ("batch",),
+               "k": ("layers", "batch", "kv_seq", "kv_heads", None),
+               "v": ("layers", "batch", "kv_seq", "kv_heads", None),
+               "ssm_h": ("layers", "batch", "ssm_inner", None, None),
+               "ssm_conv": ("layers", "batch", None, None)}
+    defs = _cache_defs(cfg, batch, seq_len)
+    return {k: logical_spec(v.shape, logical[k], rules, mesh)
+            for k, v in defs.items()}
+
+
+def decode_step(params, cache: dict, tokens: jax.Array, cfg: ArchConfig,
+                rules: ShardingRules = DEFAULT_RULES):
+    """One decode step. tokens: (B,) int32. Returns (logits, new_cache)."""
+    pos = cache["pos"]
+    x = embed_lookup(params["embed"], tokens[:, None]).astype(DTYPE)
+
+    def body(x, scans):
+        lp, layer_cache = scans
+        new_cache = dict(layer_cache)
+        if cfg.family == "hybrid":
+            h = _norm(cfg, lp, "attn_norm", x)
+            a_out, nk, nv = attention.attn_decode(
+                lp["attn"], h, layer_cache["k"], layer_cache["v"], pos, cfg,
+                rules)
+            st = ssm_mod.SSMState(layer_cache["ssm_h"],
+                                  layer_cache["ssm_conv"])
+            s_out, st = ssm_mod.ssm_decode(lp["ssm"], h, st, cfg)
+            x = x + 0.5 * (a_out + s_out)
+            new_cache.update(k=nk, v=nv, ssm_h=st.h, ssm_conv=st.conv)
+        elif not cfg.attn_free:
+            h = _norm(cfg, lp, "attn_norm", x)
+            a_out, nk, nv = attention.attn_decode(
+                lp["attn"], h, layer_cache["k"], layer_cache["v"], pos, cfg,
+                rules)
+            x = x + a_out
+            new_cache.update(k=nk, v=nv)
+        if cfg.ssm is not None and cfg.family != "hybrid":
+            h = _norm(cfg, lp, "ssm_norm", x)
+            st = ssm_mod.SSMState(layer_cache["ssm_h"],
+                                  layer_cache["ssm_conv"])
+            s_out, st = ssm_mod.ssm_decode(lp["ssm"], h, st, cfg)
+            x = x + s_out
+            new_cache.update(ssm_h=st.h, ssm_conv=st.conv)
+        if cfg.d_ff:
+            h = _norm(cfg, lp, "mlp_norm", x)
+            x = x + mlp_apply(lp["mlp"], h, cfg.activation, rules)
+        if cfg.moe is not None:
+            h = _norm(cfg, lp, "moe_norm", x)
+            m_out, _, _ = moe_mod.moe_apply(lp["moe"], h, cfg, rules)
+            x = x + m_out
+        return x, new_cache
+
+    layer_caches = {k: v for k, v in cache.items() if k != "pos"}
+    x, new_caches = scan_util.scan(body, x, (params["layers"], layer_caches))
+    logits = _logits(params, x, cfg, rules)[:, 0]
+    new_cache = dict(new_caches)
+    new_cache["pos"] = pos + 1
+    return logits, new_cache

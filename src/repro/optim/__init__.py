@@ -1,0 +1,8 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+from .spin_shampoo import (SpinShampooConfig, spin_shampoo_init,
+                           spin_shampoo_update, invert_spd)
+from . import schedule
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "global_norm",
+           "SpinShampooConfig", "spin_shampoo_init", "spin_shampoo_update",
+           "invert_spd", "schedule"]

@@ -1,0 +1,75 @@
+"""AdamW with f32 master weights (params stored bf16, math in f32)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    master: object          # f32 copy of params
+    m: object
+    v: object
+
+
+def adamw_init(params) -> AdamWState:
+    # copy=True: .astype is a no-op for already-f32 leaves (MoE router), and
+    # an aliased master/param pair breaks buffer donation in the train step
+    f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      master=jax.tree.map(f32, params),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def adamw_update(cfg: AdamWConfig, grads, state: AdamWState, lr_scale=1.0
+                 ) -> tuple[object, AdamWState, jax.Array]:
+    """Returns (new_params_bf16_tree, new_state, grad_norm)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    b1t = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2t = 1 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat, vhat = m / b1t, v / b2t
+        new_master = master - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                                    + cfg.weight_decay * master)
+        return m, v, new_master
+
+    # map over (grads, m, v, master) jointly, then unzip the result tuples
+    trip = jax.tree.map(lambda g, m_, v_, ma: upd(g, m_, v_, ma),
+                        grads, state.m, state.v, state.master)
+    m = jax.tree.map(lambda t: t[0], trip, is_leaf=lambda x: isinstance(x, tuple))
+    v = jax.tree.map(lambda t: t[1], trip, is_leaf=lambda x: isinstance(x, tuple))
+    master = jax.tree.map(lambda t: t[2], trip,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(lambda ma, p: ma.astype(p.dtype), master, grads)
+    return new_params, AdamWState(step, master, m, v), gnorm

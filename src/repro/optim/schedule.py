@@ -1,0 +1,20 @@
+"""LR schedules (pure functions of step, f32-safe under jit)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["cosine_with_warmup", "constant"]
+
+
+def cosine_with_warmup(step, *, warmup: int = 100, total: int = 10_000,
+                       floor: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / max(warmup, 1), 1.0)
+    frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return warm * cos
+
+
+def constant(step):
+    return jnp.ones_like(step, jnp.float32)

@@ -1,0 +1,5 @@
+from .sharding import (DEFAULT_RULES, ShardingRules, logical_spec,
+                       named_sharding, shard)
+
+__all__ = ["DEFAULT_RULES", "ShardingRules", "logical_spec", "named_sharding",
+           "shard"]

@@ -1,0 +1,118 @@
+"""Logical-axis sharding rules (MaxText-style), resolved against the mesh.
+
+Model code annotates tensors with *logical* axis names; the rules table maps
+them to mesh axes. Resolution is divisibility-aware: a mesh axis that does
+not evenly divide the corresponding dim is dropped (e.g. mamba2's 24 SSM
+heads on a 16-way model axis fall back to replication) — recorded per-cell by
+the dry-run instead of failing the lowering.
+
+Rules are a plain dataclass so hillclimbing can swap entries per cell
+(EXPERIMENTS.md §Perf tracks these as named variants).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardingRules", "DEFAULT_RULES", "logical_spec", "shard",
+           "named_sharding", "mesh_axis_size"]
+
+AxisRule = Union[None, str, tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """logical axis name -> mesh axis (or tuple for multi-axis sharding)."""
+    batch: AxisRule = ("pod", "data")
+    seq: AxisRule = None              # 'model' enables Megatron-style SP
+    kv_seq: AxisRule = "model"        # decode-time KV cache length
+    heads: AxisRule = "model"
+    kv_heads: AxisRule = "model"
+    ffn: AxisRule = "model"
+    vocab: AxisRule = "model"
+    experts: AxisRule = "model"
+    ssm_inner: AxisRule = "model"
+    # SSD chunk-parallel sharding: opt-in (rules variant "ssd_cp"); it cuts
+    # HBM bytes/temp ~30% but costs reshard collectives at the scan boundary
+    ssm_chunk: AxisRule = None
+    embed: AxisRule = None            # activation embedding dim
+    embed_w: AxisRule = "data"        # weight FSDP dim
+    layers: AxisRule = None
+    none: AxisRule = None
+
+    def get(self, name: Optional[str]) -> AxisRule:
+        if name is None:
+            return None
+        return getattr(self, name)
+
+
+DEFAULT_RULES = ShardingRules()
+
+
+def _mesh_axes(mesh) -> dict[str, int]:
+    return dict(mesh.shape) if mesh is not None else {}
+
+
+def _resolve_one(dim: int, rule: AxisRule, axes: dict[str, int],
+                 used: set[str]):
+    """Keep only mesh axes that exist, are unused by earlier dims of this
+    tensor, and whose product divides `dim`."""
+    if rule is None:
+        return None
+    parts = (rule,) if isinstance(rule, str) else tuple(rule)
+    kept: list[str] = []
+    size = 1
+    for pt in parts:
+        if pt not in axes or pt in used:
+            continue
+        if dim % (size * axes[pt]) == 0:
+            kept.append(pt)
+            size *= axes[pt]
+    used.update(kept)
+    if not kept:
+        return None
+    return kept[0] if len(kept) == 1 else tuple(kept)
+
+
+def logical_spec(shape: tuple[int, ...], logical: tuple[Optional[str], ...],
+                 rules: ShardingRules, mesh=None) -> P:
+    """Resolve per-dim logical names into a PartitionSpec for `mesh`.
+
+    Earlier dims win conflicting mesh axes (a PartitionSpec may use each mesh
+    axis once) — order the logical tuple by sharding priority.
+    """
+    if mesh is None:
+        mesh = jax.sharding.get_abstract_mesh()
+    axes = _mesh_axes(mesh)
+    if len(shape) != len(logical):
+        raise ValueError(f"rank mismatch: shape {shape} vs logical {logical}")
+    used: set[str] = set()
+    return P(*[_resolve_one(d, rules.get(name), axes, used)
+               for d, name in zip(shape, logical)])
+
+
+def shard(x: jax.Array, *logical: Optional[str],
+          rules: ShardingRules = DEFAULT_RULES) -> jax.Array:
+    """with_sharding_constraint under the current mesh (no-op without one)."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.shape:
+        return x
+    spec = logical_spec(x.shape, logical, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def named_sharding(mesh: Mesh, shape: tuple[int, ...],
+                   logical: tuple[Optional[str], ...],
+                   rules: ShardingRules = DEFAULT_RULES) -> NamedSharding:
+    return NamedSharding(mesh, logical_spec(shape, logical, rules, mesh))
+
+
+def mesh_axis_size(name: str) -> int:
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or name not in mesh.shape:
+        return 1
+    return mesh.shape[name]

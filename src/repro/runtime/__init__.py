@@ -1,0 +1,3 @@
+from .trainer import TrainConfig, TrainState, Trainer, make_train_step
+
+__all__ = ["TrainConfig", "TrainState", "Trainer", "make_train_step"]

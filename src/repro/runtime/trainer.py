@@ -1,0 +1,174 @@
+"""Training step + loop: gradient accumulation, remat, fault tolerance hooks.
+
+`make_train_step` builds the jit-able step:
+    state -> microbatch scan of value_and_grad (remat'd layer scan inside)
+          -> gradient mean -> optimizer update (AdamW or SPIN-Shampoo)
+Gradient accumulation is a lax.scan over leading-reshaped microbatches, so
+activation peak memory is one microbatch deep regardless of global batch.
+
+`Trainer` adds the operational layer: checkpoint/restart (async two-phase),
+straggler detection (EWMA step-time watchdog), and restartable data streams.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ArchConfig
+from repro.models import transformer as T
+from repro.optim import (AdamWConfig, SpinShampooConfig, adamw_init,
+                         adamw_update, schedule, spin_shampoo_init,
+                         spin_shampoo_update)
+from repro.parallel.sharding import DEFAULT_RULES, ShardingRules
+
+__all__ = ["TrainConfig", "TrainState", "make_train_step", "init_state",
+           "Trainer"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 8
+    optimizer: str = "adamw"          # adamw | spin_shampoo
+    adamw: AdamWConfig = AdamWConfig()
+    shampoo: SpinShampooConfig = SpinShampooConfig()
+    warmup: int = 100
+    total_steps: int = 10_000
+    remat: bool = True
+    remat_policy: str = "full"        # full | dots (§Perf knob)
+    straggler_ewma: float = 0.9
+    straggler_factor: float = 3.0     # step slower than 3x EWMA -> flag
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    step: jax.Array
+
+
+def init_state(cfg: ArchConfig, tcfg: TrainConfig, key: jax.Array,
+               model_size_hint: int = 16) -> TrainState:
+    params = T.init_params(cfg, key, model_size_hint)
+    opt = (adamw_init(params) if tcfg.optimizer == "adamw"
+           else spin_shampoo_init(params, tcfg.shampoo))
+    return TrainState(params, opt, jnp.zeros((), jnp.int32))
+
+
+def abstract_state(cfg: ArchConfig, tcfg: TrainConfig,
+                   model_size_hint: int = 16) -> TrainState:
+    """ShapeDtypeStruct mirror of init_state (dry-run, no allocation)."""
+    params = T.abstract_params(cfg, model_size_hint)
+    opt = jax.eval_shape(
+        lambda p: (adamw_init(p) if tcfg.optimizer == "adamw"
+                   else spin_shampoo_init(p, tcfg.shampoo)), params)
+    return TrainState(params, opt,
+                      jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def make_train_step(cfg: ArchConfig, tcfg: TrainConfig,
+                    rules: ShardingRules = DEFAULT_RULES
+                    ) -> Callable[[TrainState, dict], tuple[TrainState, dict]]:
+    def train_step(state: TrainState, batch: dict):
+        nm = tcfg.microbatches
+
+        def to_micro(x):
+            return x.reshape(nm, x.shape[0] // nm, *x.shape[1:])
+
+        micro = jax.tree.map(to_micro, batch)
+
+        def micro_step(acc, mb):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: T.loss_fn(p, mb, cfg, rules, remat=tcfg.remat,
+                                    remat_policy=tcfg.remat_policy),
+                has_aux=True)(state.params)
+            acc_g, acc_loss = acc
+            acc_g = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                 acc_g, grads)
+            return (acc_g, acc_loss + loss), metrics
+
+        from repro.models import scan_util
+        zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              state.params)
+        (sum_g, sum_loss), _ = scan_util.scan(
+            micro_step, (zero_g, jnp.zeros((), jnp.float32)), micro)
+        grads = jax.tree.map(
+            lambda g, p: (g / nm).astype(p.dtype), sum_g, state.params)
+        loss = sum_loss / nm
+
+        lr_scale = schedule.cosine_with_warmup(
+            state.step, warmup=tcfg.warmup, total=tcfg.total_steps)
+        if tcfg.optimizer == "adamw":
+            new_params, new_opt, gnorm = adamw_update(
+                tcfg.adamw, grads, state.opt, lr_scale)
+        else:
+            new_params, new_opt, gnorm = spin_shampoo_update(
+                tcfg.shampoo, grads, state.opt, lr_scale)
+        new_state = TrainState(new_params, new_opt, state.step + 1)
+        return new_state, {"loss": loss, "grad_norm": gnorm,
+                           "lr_scale": lr_scale}
+
+    return train_step
+
+
+class Trainer:
+    """Operational loop: step timing, straggler watchdog, ckpt/restart."""
+
+    def __init__(self, cfg: ArchConfig, tcfg: TrainConfig, stream,
+                 ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
+                 rules: ShardingRules = DEFAULT_RULES):
+        self.cfg, self.tcfg, self.stream = cfg, tcfg, stream
+        self.ckpt_dir, self.ckpt_every = ckpt_dir, ckpt_every
+        self.rules = rules
+        self.step_fn = jax.jit(make_train_step(cfg, tcfg, rules),
+                               donate_argnums=0)
+        self._ewma: Optional[float] = None
+        self.straggler_events: list[dict] = []
+
+    def maybe_restore(self, state: TrainState) -> TrainState:
+        if not self.ckpt_dir:
+            return state
+        from repro.checkpoint.ckpt import latest_step, restore
+        step = latest_step(self.ckpt_dir)
+        if step is None:
+            return state
+        state, extra = restore(self.ckpt_dir, step, state)
+        if "stream" in extra:
+            self.stream.load_state_dict(extra["stream"])
+        return state
+
+    def _watch(self, dt: float, step: int) -> None:
+        if self._ewma is None:
+            self._ewma = dt
+            return
+        if dt > self.tcfg.straggler_factor * self._ewma:
+            # On a pod this triggers re-shard-around-failed-host; here we
+            # record the event (CPU container has no hosts to evict).
+            self.straggler_events.append(
+                {"step": step, "dt": dt, "ewma": self._ewma})
+        a = self.tcfg.straggler_ewma
+        self._ewma = a * self._ewma + (1 - a) * dt
+
+    def run(self, state: TrainState, n_steps: int,
+            log_every: int = 10) -> tuple[TrainState, list[dict]]:
+        logs = []
+        for i in range(n_steps):
+            batch = self.stream.next()
+            t0 = time.perf_counter()
+            state, metrics = self.step_fn(state, batch)
+            metrics = jax.tree.map(float, jax.device_get(metrics))
+            dt = time.perf_counter() - t0
+            self._watch(dt, int(state.step))
+            metrics.update(step=int(state.step), dt=dt)
+            logs.append(metrics)
+            if log_every and i % log_every == 0:
+                print(f"step {metrics['step']:5d} loss {metrics['loss']:.4f} "
+                      f"gnorm {metrics['grad_norm']:.3f} {dt*1e3:.0f}ms")
+            if self.ckpt_dir and int(state.step) % self.ckpt_every == 0:
+                from repro.checkpoint.ckpt import save
+                save(self.ckpt_dir, int(state.step), state,
+                     extra={"stream": self.stream.state_dict()})
+        return state, logs

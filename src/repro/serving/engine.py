@@ -1,0 +1,125 @@
+"""Continuous-batching serving engine.
+
+Production decode pattern: a fixed pool of batch slots over one shared
+KV/SSM cache; requests join free slots as they arrive (their prompt streams
+into their own slot), every engine tick advances ALL slots by one token, and
+finished slots are recycled without disturbing neighbours. This is the
+slot-level half of vLLM-style serving — block-paged KV is an orthogonal
+extension noted in DESIGN.md.
+
+Correctness relies on two cache properties of `transformer.decode_step`:
+  * attention masks kv positions > pos, so stale rows left by a previous
+    occupant above the new prompt are invisible;
+  * SSM state integrates history, so it IS reset to zero on slot admit.
+
+The engine drives the same jitted `decode_step` the dry-run lowers, so a
+TPU deployment jits one step function per (cfg, slots, max_len) and the
+scheduler stays in host Python.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ArchConfig
+from repro.models import transformer as T
+
+__all__ = ["Request", "ServingEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: list[int]
+    max_new_tokens: int = 16
+    # filled by the engine
+    output: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    slot: Optional[int] = None
+    _remaining: deque = dataclasses.field(default_factory=deque, repr=False)
+
+
+class ServingEngine:
+    """Slot-based continuous batching over a single shared cache."""
+
+    def __init__(self, cfg: ArchConfig, params, *, slots: int = 4,
+                 max_len: int = 256,
+                 sampler: Optional[Callable] = None):
+        if not cfg.decode_capable:
+            raise ValueError(f"{cfg.name} has no decode step")
+        self.cfg, self.params = cfg, params
+        self.slots, self.max_len = slots, max_len
+        self.cache = T.init_cache(cfg, slots, max_len)
+        self._free: deque[int] = deque(range(slots))
+        self._live: dict[int, Request] = {}
+        self._queue: deque[Request] = deque()
+        self.sampler = sampler or (lambda logits: jnp.argmax(logits, -1))
+        self._decode = jax.jit(
+            lambda p, c, t: T.decode_step(p, c, t, cfg), donate_argnums=1)
+        self.ticks = 0
+
+    def submit(self, req: Request) -> None:
+        req._remaining = deque(req.prompt)
+        self._queue.append(req)
+
+    def _reset_slot(self, slot: int) -> None:
+        self.cache["pos"] = self.cache["pos"].at[slot].set(0)
+        for key in ("ssm_h", "ssm_conv"):
+            if key in self.cache:       # state integrates history -> zero it
+                self.cache[key] = self.cache[key].at[:, slot].set(0)
+
+    def _admit(self) -> None:
+        while self._queue and self._free:
+            slot = self._free.popleft()
+            req = self._queue.popleft()
+            req.slot = slot
+            self._live[slot] = req
+            self._reset_slot(slot)
+
+    def _finish(self, slot: int) -> None:
+        self._live[slot].done = True
+        del self._live[slot]
+        self._free.append(slot)
+
+    def tick(self) -> int:
+        """Advance every live slot one token (prompt ingest or decode).
+        Returns the number of live slots after recycling."""
+        self._admit()
+        if not self._live:
+            return 0
+        tokens = np.zeros((self.slots,), np.int32)
+        ingesting = np.zeros((self.slots,), bool)
+        for slot, req in self._live.items():
+            if req._remaining:
+                ingesting[slot] = True
+                tokens[slot] = req._remaining.popleft()
+            else:
+                tokens[slot] = req.output[-1] if req.output \
+                    else (req.prompt[-1] if req.prompt else 0)
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(tokens))
+        nxt = np.asarray(self.sampler(logits))
+        for slot in list(self._live):
+            req = self._live[slot]
+            if ingesting[slot] and req._remaining:
+                continue                      # still streaming the prompt
+            req.output.append(int(nxt[slot]))
+            if len(req.output) >= req.max_new_tokens \
+                    or int(self.cache["pos"][slot]) >= self.max_len - 1:
+                self._finish(slot)
+        self.ticks += 1
+        return len(self._live)
+
+    def run_until_done(self, max_ticks: int = 10_000) -> None:
+        for _ in range(max_ticks):
+            self._admit()
+            if not self._live and not self._queue:
+                return
+            self.tick()
+        raise RuntimeError("serving did not drain")

@@ -1,0 +1,89 @@
+"""BlockMatrix data-structure tests (paper §3.2 methods)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BlockMatrix, count_ops, multiply
+from repro.core.testing import make_spd
+
+
+def grids():
+    return st.sampled_from([(2, 8), (2, 16), (4, 8), (4, 16), (8, 4)])
+
+
+@settings(max_examples=12, deadline=None)
+@given(grids(), st.integers(0, 2 ** 31 - 1))
+def test_from_dense_roundtrip(gb, seed):
+    b, bs = gb
+    n = b * bs
+    dense = jax.random.normal(jax.random.PRNGKey(seed), (n, n))
+    bm = BlockMatrix.from_dense(dense, bs)
+    assert bm.grid == b and bm.block_size == bs and bm.n == n
+    assert jnp.array_equal(bm.to_dense(), dense)
+
+
+def test_block_layout_matches_indexing():
+    # blocks[i, j] must be the (i, j) sub-block of the dense matrix
+    n, bs = 8, 4
+    dense = jnp.arange(n * n, dtype=jnp.float32).reshape(n, n)
+    bm = BlockMatrix.from_dense(dense, bs)
+    assert jnp.array_equal(bm.blocks[0, 1], dense[:4, 4:])
+    assert jnp.array_equal(bm.blocks[1, 0], dense[4:, :4])
+
+
+def test_split_arrange_inverse():
+    dense = jax.random.normal(jax.random.PRNGKey(0), (64, 64))
+    bm = BlockMatrix.from_dense(dense, 8)
+    a11, a12, a21, a22 = bm.split()
+    back = BlockMatrix.arrange(a11, a12, a21, a22)
+    assert jnp.array_equal(back.to_dense(), dense)
+
+
+def test_split_odd_grid_raises():
+    bm = BlockMatrix.from_dense(jnp.eye(48), 16)  # grid 3
+    with pytest.raises(ValueError):
+        bm.split()
+
+
+def test_arith_matches_dense():
+    key = jax.random.PRNGKey(1)
+    a = jax.random.normal(key, (32, 32))
+    b = jax.random.normal(jax.random.PRNGKey(2), (32, 32))
+    A, B = BlockMatrix.from_dense(a, 8), BlockMatrix.from_dense(b, 8)
+    assert jnp.allclose(A.subtract(B).to_dense(), a - b)
+    assert jnp.allclose(A.add(B).to_dense(), a + b)
+    assert jnp.allclose(A.scalar_mul(-2.5).to_dense(), -2.5 * a)
+    assert jnp.allclose(A.transpose().to_dense(), a.T)
+    assert jnp.allclose(multiply(A, B).to_dense(), a @ b, atol=1e-4)
+
+
+def test_identity_zeros():
+    eye = BlockMatrix.identity(4, 8)
+    assert jnp.array_equal(eye.to_dense(), jnp.eye(32))
+    z = BlockMatrix.zeros(4, 8)
+    assert jnp.array_equal(z.to_dense(), jnp.zeros((32, 32)))
+
+
+def test_op_counting():
+    a = make_spd(64, jax.random.PRNGKey(0))
+    A = BlockMatrix.from_dense(a, 16)
+    with count_ops() as c:
+        _ = multiply(A, A)
+        _ = A.subtract(A)
+        _ = A.scalar_mul(2.0)
+    assert c.multiplies == 1
+    assert c.block_gemms == 4 ** 3
+    assert c.subtracts == 1
+    assert c.scalar_muls == 1
+
+
+def test_pytree_roundtrip():
+    bm = BlockMatrix.from_dense(jnp.eye(16), 4)
+    leaves, treedef = jax.tree.flatten(bm)
+    bm2 = jax.tree.unflatten(treedef, leaves)
+    assert jnp.array_equal(bm2.blocks, bm.blocks)
+    # works under jit
+    out = jax.jit(lambda m: m.scalar_mul(3.0))(bm)
+    assert jnp.allclose(out.to_dense(), 3 * jnp.eye(16))

@@ -1,0 +1,142 @@
+"""Cost-model (paper §4) and sharding-rule resolution tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.costmodel import (CostParams, fit_scale, lu_cost,
+                                  spin_cost, spin_schedule, tpu_roofline_cost)
+from repro.parallel.compression import (compressed_psum,
+                                        dequantize_int8,
+                                        error_feedback_update, quantize_int8)
+from repro.parallel.sharding import ShardingRules, logical_spec
+
+
+# ---------------------------------------------------------------- cost model
+
+def test_spin_beats_lu_everywhere():
+    """Lemma 4.1 vs 4.2: SPIN's modeled cost must be below LU's for every
+    (n, b) the paper sweeps — the Fig. 2/3 ordering."""
+    for n in (4096, 8192, 16384):
+        for b in (2, 4, 8, 16):
+            p = CostParams(n=n, b=b, cores=11)
+            assert spin_cost(p)["total"] < lu_cost(p)["total"], (n, b)
+
+
+def test_u_shape_in_b():
+    """The paper's headline: wall-clock vs splits b is U-shaped (leaf cost
+    falls as n^3/b^2, multiply/shuffle cost rises)."""
+    n = 16384
+    costs = [spin_cost(CostParams(n=n, b=b, cores=11,
+                                  t_flop=1e-9, t_block_op=2e-3))["total"]
+             for b in (2, 4, 8, 16, 32, 64)]
+    mins = int(np.argmin(costs))
+    assert 0 < mins < len(costs) - 1, f"not U-shaped: {costs}"
+
+
+def test_leaf_cost_scaling():
+    p2 = spin_cost(CostParams(n=8192, b=2, cores=12))["leafNode"]
+    p4 = spin_cost(CostParams(n=8192, b=4, cores=12))["leafNode"]
+    assert abs(p2 / p4 - 4.0) < 1e-6        # leaf ~ n^3 / b^2
+
+
+def test_schedule_trace():
+    sched = spin_schedule(256, 32)          # b=8, 3 levels + leaves
+    assert len(sched) == 4
+    assert sched[0]["multiplies"] == 6
+    assert sched[-1]["leaf_inversions"] == 1
+    assert sched[-1]["nodes"] == 8
+    assert sum(l["nodes"] * l.get("multiplies", 0) for l in sched) == 42
+
+
+def test_fit_scale_recovers_model():
+    truth = CostParams(n=8192, b=8, cores=11, t_flop=2e-10, t_leaf=8e-10,
+                       t_block_op=1e-4, t_elem=3e-9)
+    measured = {b: spin_cost(CostParams(n=8192, b=b, cores=11,
+                                        t_flop=truth.t_flop,
+                                        t_leaf=truth.t_leaf,
+                                        t_block_op=truth.t_block_op,
+                                        t_elem=truth.t_elem))["total"]
+                for b in (2, 4, 8, 16, 32)}
+    fit = fit_scale(spin_cost, measured, n=8192, cores=11)
+    # coefficients may trade off along near-colinear directions; what must
+    # hold is that the calibrated model reproduces every measurement
+    for b, t in measured.items():
+        pred = spin_cost(CostParams(n=8192, b=b, cores=11, t_flop=fit.t_flop,
+                                    t_leaf=fit.t_leaf,
+                                    t_block_op=fit.t_block_op,
+                                    t_elem=fit.t_elem))["total"]
+        assert abs(pred - t) / t < 1e-6, (b, pred, t)
+
+
+def test_tpu_roofline_terms():
+    r = tpu_roofline_cost(n=16384, b=16, chips=256)
+    assert r["flops"] > 0 and r["bytes_ici"] > 0
+    assert r["bottleneck"] in ("compute", "memory", "collective")
+    # 2x matrix -> 8x flops
+    r2 = tpu_roofline_cost(n=32768, b=16, chips=256)
+    assert 7.5 < r2["flops"] / r["flops"] < 8.5
+
+
+# ------------------------------------------------------------------ sharding
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def test_logical_spec_divisibility_drop():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    rules = ShardingRules()
+    # 24 heads don't divide 16 -> replicated
+    spec = logical_spec((24, 64), ("heads", None), rules, mesh)
+    assert spec == jax.sharding.PartitionSpec(None, None)
+    spec = logical_spec((32, 64), ("heads", None), rules, mesh)
+    assert spec == jax.sharding.PartitionSpec("model", None)
+
+
+def test_logical_spec_conflict_resolution():
+    mesh = FakeMesh({"data": 4, "model": 4})
+    rules = ShardingRules()
+    # kv_seq and kv_heads both want 'model'; first dim wins
+    spec = logical_spec((8, 64, 8, 16), ("batch", "kv_seq", "kv_heads", None),
+                        rules, mesh)
+    assert spec[1] == "model" and spec[2] is None
+
+
+def test_logical_spec_multi_axis_batch():
+    mesh = FakeMesh({"pod": 2, "data": 4, "model": 4})
+    spec = logical_spec((16, 128), ("batch", None), ShardingRules(), mesh)
+    assert spec[0] == ("pod", "data")
+    # batch=2 only divisible by pod
+    spec = logical_spec((2, 128), ("batch", None), ShardingRules(), mesh)
+    assert spec[0] == "pod"
+
+
+# --------------------------------------------------------------- compression
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_int8_quantization_bound(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (256,)) * 5
+    q, s = quantize_int8(x)
+    err = jnp.max(jnp.abs(dequantize_int8(q, s) - x))
+    assert float(err) <= float(s) * 0.5 + 1e-6   # half-ulp rounding
+
+
+def test_error_feedback_is_unbiased_over_steps():
+    """Residual carrying: sum of dequantized grads converges to sum of true
+    grads (error feedback keeps long-run bias ~0)."""
+    key = jax.random.PRNGKey(0)
+    true_sum = jnp.zeros((64,))
+    deq_sum = jnp.zeros((64,))
+    resid = None
+    for i in range(50):
+        g = jax.random.normal(jax.random.fold_in(key, i), (64,))
+        true_sum = true_sum + g
+        deq, resid = error_feedback_update(g, resid)
+        deq_sum = deq_sum + deq
+    # the only gap left is the final residual, which is one quantization step
+    assert float(jnp.max(jnp.abs(true_sum - deq_sum - resid))) < 1e-4

@@ -1,0 +1,166 @@
+"""Distributed-path tests. Each test runs a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count so the shard_map engines,
+EP MoE, sharded embedding, and elastic checkpoint restore execute on a real
+(fake-)multi-device mesh. The main pytest process must keep seeing exactly
+one device (per the brief), hence subprocesses."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(code: str, devices: int = 16, timeout: int = 420) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def test_multiply_engines_and_spin_on_mesh():
+    out = run_py("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P, NamedSharding, AxisType
+        from repro.core import BlockMatrix, multiply_engine, testing, \\
+            spin_inverse, lu_inverse, multiply
+
+        mesh = jax.make_mesh((4, 4), ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
+        a = testing.make_spd(512, jax.random.PRNGKey(1))
+        A = BlockMatrix.from_dense(a, 64)
+        with jax.set_mesh(mesh):
+            sh = NamedSharding(mesh, P("data", "model", None, None))
+            Ab = jax.device_put(A.blocks, sh)
+            for eng in ("einsum", "allgather", "ring"):
+                with multiply_engine(eng):
+                    inv = jax.jit(lambda x: spin_inverse(
+                        BlockMatrix(x)).blocks)(Ab)
+                r = jnp.linalg.norm(BlockMatrix(inv).to_dense() @ a
+                                    - jnp.eye(512)) / 512 ** 0.5
+                assert float(r) < 1e-3, (eng, float(r))
+                print(eng, "resid", float(r))
+            with multiply_engine("ring"):
+                inv = jax.jit(lambda x: lu_inverse(BlockMatrix(x)).blocks)(Ab)
+            r = jnp.linalg.norm(BlockMatrix(inv).to_dense() @ a
+                                - jnp.eye(512)) / 512 ** 0.5
+            assert float(r) < 1e-3
+            print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_moe_ep_matches_local():
+    """Expert-parallel all_to_all dispatch must equal the single-device
+    reference bit-for-bit in routing semantics (same capacity, same gates)."""
+    out = run_py("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P, NamedSharding, AxisType
+        from repro.configs import get_arch
+        from repro.models import moe as moe_mod
+        from repro.models.layers import init_tree
+        import dataclasses as dc
+
+        cfg = get_arch("dbrx-132b").reduced()
+        # 4 experts over 4-way model axis -> E_loc = 1
+        defs = moe_mod.moe_params(cfg, model_size_hint=4)
+        params = init_tree(defs, jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model),
+                              jnp.float32).astype(jnp.bfloat16)
+        ref, aux_ref, z_ref = moe_mod.moe_apply(params, x, cfg)
+
+        mesh = jax.make_mesh((4, 4), ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
+        with jax.set_mesh(mesh):
+            got, aux, z = jax.jit(
+                lambda p, x: moe_mod.moe_apply(p, x, cfg))(params, x)
+        err = jnp.max(jnp.abs(got.astype(jnp.float32)
+                              - ref.astype(jnp.float32)))
+        print("max err", float(err), "aux", float(aux), float(aux_ref))
+        assert float(err) < 2e-2, float(err)
+        # aux is a per-group (per-shard) load-balance loss under EP — close
+        # to but not identical with the single-group reference
+        assert abs(float(aux) - float(aux_ref)) < 0.15
+        assert abs(float(z) - float(z_ref)) < 1e-3
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_embed_lookup_sharded_matches_take():
+    out = run_py("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import AxisType
+        from repro.models.embedding import embed_lookup
+
+        emb = jax.random.normal(jax.random.PRNGKey(0), (64, 32),
+                                jnp.float32)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (8, 12), 0, 64)
+        want = jnp.take(emb, toks, axis=0)
+        mesh = jax.make_mesh((4, 4), ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
+        with jax.set_mesh(mesh):
+            got = jax.jit(embed_lookup)(emb, toks)
+        assert jnp.allclose(got, want, atol=1e-6)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_elastic_checkpoint_restore_across_meshes():
+    """Save sharded on a 2x2 mesh, restore onto 8-way — elastic rescale."""
+    out = run_py("""
+        import tempfile, jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P, NamedSharding, AxisType
+        from repro.checkpoint.ckpt import save, restore
+
+        devs = jax.devices()
+        mesh_a = jax.make_mesh((2, 2), ("data", "model"),
+                               axis_types=(AxisType.Auto,)*2,
+                               devices=devs[:4])
+        w = jnp.arange(64 * 8, dtype=jnp.float32).reshape(64, 8)
+        w_sharded = jax.device_put(
+            w, NamedSharding(mesh_a, P("data", "model")))
+        state = {"w": w_sharded, "step": jnp.int32(5)}
+        with tempfile.TemporaryDirectory() as d:
+            save(d, 5, state)
+            mesh_b = jax.make_mesh((8,), ("data",),
+                                   axis_types=(AxisType.Auto,),
+                                   devices=devs[:8])
+            shardings = {"w": NamedSharding(mesh_b, P("data", None)),
+                         "step": NamedSharding(mesh_b, P())}
+            got, _ = restore(d, 5, state, shardings=shardings)
+            assert np.array_equal(np.asarray(got["w"]), np.asarray(w))
+            assert got["w"].sharding.num_devices == 8
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_compressed_psum_pod_axis():
+    out = run_py("""
+        import jax, jax.numpy as jnp, functools
+        from jax.sharding import PartitionSpec as P, AxisType
+        from repro.parallel.compression import compressed_psum
+
+        mesh = jax.make_mesh((4,), ("pod",), axis_types=(AxisType.Auto,))
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 64))
+        with jax.set_mesh(mesh):
+            got = jax.jit(jax.shard_map(
+                functools.partial(compressed_psum, axis_name="pod"),
+                mesh=mesh, in_specs=P("pod", None), out_specs=P(None, None),
+                check_vma=False))(x)
+        want = jnp.broadcast_to(x.sum(0), (64,))
+        rel = float(jnp.max(jnp.abs(got[0] - want)) /
+                    (jnp.max(jnp.abs(want)) + 1e-9))
+        assert rel < 0.05, rel      # int8 quantization tolerance
+        print("OK")
+    """, devices=4)
+    assert "OK" in out

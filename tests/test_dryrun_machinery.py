@@ -1,0 +1,108 @@
+"""Dry-run machinery tests that don't need 512 devices: the HLO collective
+parser, cell eligibility rules, cost extrapolation, input specs."""
+
+import importlib.util
+import os
+import sys
+
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import SHAPES, cell_status, get_arch, list_archs
+from repro.data.synthetic import input_specs, make_batch
+
+
+def _load_dryrun_module():
+    """Import dryrun WITHOUT executing its XLA_FLAGS side effect leaking into
+    this process's device count (jax is already initialized here, so setting
+    the env var is harmless — devices were locked at first use)."""
+    import repro.launch.dryrun as dr
+    return dr
+
+
+HLO_SAMPLE = """
+HloModule jit_f
+%add.clone (x: f32[]) -> f32[] { ... }
+ENTRY %main {
+  %p0 = f32[64,128]{1,0} parameter(0)
+  %dot = f32[64,128]{1,0} dot(%p0, %p0)
+  %all-reduce = f32[64,128]{1,0} all-reduce(%dot), replica_groups=[4,4]<=[16], to_apply=%add.clone
+  %big = bf16[2,4096,6144]{2,1,0} convert(%all-reduce)
+  %all-gather = bf16[2,4096,6144]{2,1,0} all-gather(%big), dimensions={1}
+  %cp = bf16[2,4096,6144]{2,1,0} collective-permute(%all-gather), source_target_pairs={{0,1}}
+  %a2a = bf16[2,4096,6144]{2,1,0} all-to-all(%cp), dimensions={0}
+  ROOT %rs = f32[4,128]{1,0} reduce-scatter(%all-reduce), dimensions={0}
+}
+"""
+
+
+def test_collective_parser_counts_operand_bytes():
+    dr = _load_dryrun_module()
+    stats = dr.collective_stats(HLO_SAMPLE)
+    f32_small = 64 * 128 * 4
+    bf16_big = 2 * 4096 * 6144 * 2
+    assert stats["all-reduce"]["count"] == 1
+    assert stats["all-reduce"]["operand_bytes"] == f32_small
+    assert stats["all-gather"]["operand_bytes"] == bf16_big
+    assert stats["collective-permute"]["operand_bytes"] == bf16_big
+    assert stats["all-to-all"]["operand_bytes"] == bf16_big
+    assert stats["reduce-scatter"]["operand_bytes"] == f32_small
+    assert stats["total_operand_bytes"] == 2 * f32_small + 3 * bf16_big
+
+
+def test_parser_skips_done_and_counts_start():
+    dr = _load_dryrun_module()
+    hlo = """
+  %x = f32[8]{0} parameter(0)
+  %ag = (f32[8]{0}, f32[32]{0}) all-gather-start(%x), dimensions={0}
+  %agd = f32[32]{0} all-gather-done(%ag)
+"""
+    stats = dr.collective_stats(hlo)
+    assert stats["all-gather"]["count"] == 1
+    assert stats["all-gather"]["operand_bytes"] == 8 * 4
+
+
+def test_extrapolation_linear():
+    dr = _load_dryrun_module()
+    # f(L) = 10 + 3L  ->  f1=13, f2=16, L=88 -> 274
+    assert dr._extrapolate(13.0, 16.0, 88) == pytest.approx(274.0)
+    # noise clamp: f2 < f1 must not extrapolate negative
+    assert dr._extrapolate(13.0, 12.0, 88) == pytest.approx(13.0)
+
+
+def test_cell_eligibility_matrix():
+    """40 cells: 31 runnable, 8 long_500k skips, 1 encoder decode skip."""
+    runnable, skipped = 0, []
+    for arch in list_archs():
+        for shape in SHAPES.values():
+            ok, why = cell_status(get_arch(arch), shape)
+            if ok:
+                runnable += 1
+            else:
+                skipped.append((arch, shape.name, why))
+    assert runnable == 31
+    assert len(skipped) == 9
+    long_skips = [s for s in skipped if s[1] == "long_500k"]
+    assert len(long_skips) == 8
+    dec_skips = [s for s in skipped if s[0] == "hubert-xlarge"
+                 and s[1] == "decode_32k"]
+    assert len(dec_skips) == 1
+
+
+def test_input_specs_match_batches():
+    """input_specs (dry-run) and make_batch (runtime) must agree exactly."""
+    import jax
+    for arch in ("olmo-1b", "hubert-xlarge", "phi-3-vision-4.2b",
+                 "mamba2-130m"):
+        cfg = get_arch(arch)
+        for shape in SHAPES.values():
+            ok, _ = cell_status(cfg, shape)
+            if not ok:
+                continue
+            specs = input_specs(cfg, shape)
+            small = make_batch(cfg.reduced(), 2, 32, jax.random.PRNGKey(0),
+                               shape.kind)
+            assert set(specs) == set(small), (arch, shape.name)
+            for k, spec in specs.items():
+                assert spec.dtype == small[k].dtype, (arch, shape.name, k)
+                assert len(spec.shape) == small[k].ndim, (arch, shape.name, k)

@@ -1,0 +1,54 @@
+"""Flash attention Pallas kernel vs naive oracle (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attention import ops, ref
+
+
+def _mk(b, h, kv, s, hd, dtype, seed=0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(keys[0], (b, h, s, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(keys[1], (b, kv, s, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(keys[2], (b, kv, s, hd), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("h,kv", [(4, 4), (4, 1), (8, 2)])   # MHA, MQA, GQA
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_matches_ref(h, kv, causal, dtype):
+    q, k, v = _mk(2, h, kv, 128, 32, dtype)
+    got = ops.flash_attention(q, k, v, causal=causal, bq=32, bk=32)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+    err = jnp.max(jnp.abs(got.astype(jnp.float32) - want.astype(jnp.float32)))
+    assert float(err) < tol, float(err)
+
+
+@pytest.mark.parametrize("s,bq,bk", [(64, 64, 64), (128, 64, 32),
+                                     (256, 128, 128)])
+def test_flash_block_shape_sweep(s, bq, bk):
+    q, k, v = _mk(1, 2, 2, s, 64, jnp.float32, seed=s)
+    got = ops.flash_attention(q, k, v, causal=True, bq=bq, bk=bk)
+    want = ref.attention_ref(q, k, v, causal=True)
+    assert jnp.allclose(got, want, atol=2e-3)
+
+
+def test_flash_equals_model_attention():
+    """The kernel and models/attention pair-scan are numerical twins."""
+    from repro.models.attention import _attend_chunked
+    q, k, v = _mk(2, 4, 2, 128, 32, jnp.float32, seed=7)
+    got = ops.flash_attention(q, k, v, causal=True, bq=32, bk=32)
+    # models layout: (B, S, H, hd)
+    out2 = _attend_chunked(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                           v.transpose(0, 2, 1, 3), causal=True, window=0,
+                           q_chunk=32, kv_chunk=32)
+    assert jnp.allclose(got, out2.transpose(0, 2, 1, 3), atol=2e-3)
+
+
+def test_flash_rejects_bad_shapes():
+    q, k, v = _mk(1, 3, 2, 64, 32, jnp.float32)        # 3 % 2 != 0
+    with pytest.raises(ValueError):
+        ops.flash_attention(q, k, v)

@@ -1,0 +1,55 @@
+"""Sharded matrix I/O tests (the paper's HDFS ingest analogue)."""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import BlockMatrix
+from repro.core.matrix_io import (load_blockmatrix, load_meta,
+                                  save_blockmatrix)
+from repro.core.testing import make_spd
+
+
+def test_roundtrip_single_host():
+    a = make_spd(128, jax.random.PRNGKey(0))
+    bm = BlockMatrix.from_dense(a, 32)
+    with tempfile.TemporaryDirectory() as d:
+        save_blockmatrix(d, bm)
+        meta = load_meta(d)
+        assert meta["grid"] == 4 and meta["n"] == 128
+        back = load_blockmatrix(d)
+        assert jnp.allclose(back.to_dense(), a)
+
+
+def test_multi_host_write_single_read():
+    """Two 'hosts' each write their grid rows; a reader sees the union."""
+    a = make_spd(128, jax.random.PRNGKey(1))
+    bm = BlockMatrix.from_dense(a, 32)
+    with tempfile.TemporaryDirectory() as d:
+        save_blockmatrix(d, bm, host_index=0, n_hosts=2)
+        save_blockmatrix(d, bm, host_index=1, n_hosts=2)
+        back = load_blockmatrix(d)
+        assert jnp.allclose(back.to_dense(), a)
+
+
+def test_partial_read_covers_own_rows():
+    a = make_spd(128, jax.random.PRNGKey(2))
+    bm = BlockMatrix.from_dense(a, 32)
+    with tempfile.TemporaryDirectory() as d:
+        save_blockmatrix(d, bm)
+        part = load_blockmatrix(d, host_index=0, n_hosts=2, full=False)
+        # rows 0..1 loaded, rows 2..3 zero
+        assert jnp.allclose(part.blocks[:2], bm.blocks[:2])
+        assert float(jnp.abs(part.blocks[2:]).max()) == 0.0
+
+
+def test_bf16_roundtrip():
+    a = make_spd(64, jax.random.PRNGKey(3)).astype(jnp.bfloat16)
+    bm = BlockMatrix.from_dense(a, 32)
+    with tempfile.TemporaryDirectory() as d:
+        save_blockmatrix(d, bm)
+        back = load_blockmatrix(d)
+        assert back.dtype == jnp.bfloat16
+        assert jnp.allclose(back.to_dense().astype(jnp.float32),
+                            a.astype(jnp.float32))

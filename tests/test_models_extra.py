@@ -1,0 +1,115 @@
+"""Deeper model-behaviour tests: SWA rolling cache wraparound, MoE capacity
+drops, prefill-cache/decode agreement, Newton–Schulz convergence order."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_arch
+from repro.models import transformer as T
+
+
+def test_swa_rolling_cache_wraparound():
+    """Decode past the window must match forward logits computed with the
+    same window (ring buffer slots are overwritten, not masked out)."""
+    cfg = get_arch("hymba-1.5b").reduced()          # window 32 reduced
+    assert cfg.sliding_window == 32
+    params = T.init_params(cfg, jax.random.PRNGKey(0), model_size_hint=1)
+    B, S = 1, 48                                    # crosses the window
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    full, *_ = T.forward(params, {"tokens": tokens}, cfg, remat=False)
+    cache = T.init_cache(cfg, B, 64)                # rolls at 32
+    assert cache["k"].shape[2] == 32                # ring buffer = window
+    errs = []
+    for t in range(S):
+        lg, cache = T.decode_step(params, cache, tokens[:, t], cfg)
+        errs.append(float(jnp.max(jnp.abs(lg - full[:, t]))))
+    assert max(errs) < 2e-2, max(errs)
+
+
+def test_prefill_cache_feeds_decode():
+    """prefill() then decode_step must continue exactly where a pure
+    decode-from-scratch run would be."""
+    cfg = get_arch("olmo-1b").reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(0), model_size_hint=1)
+    B, S = 2, 12
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+
+    logits_p, _, _, cache_p = T.prefill(params, {"tokens": tokens}, cfg)
+    # prefill cache is laid out per full seq; decode continues at pos S
+    pad = 20 - S
+    cache = {
+        "k": jnp.pad(cache_p["k"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        "v": jnp.pad(cache_p["v"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        "pos": cache_p["pos"],
+    }
+    nxt = jnp.argmax(logits_p[:, -1], axis=-1)
+    lg_a, _ = T.decode_step(params, cache, nxt, cfg)
+
+    # reference: token-by-token decode from scratch
+    cache_b = T.init_cache(cfg, B, 20)
+    for t in range(S):
+        lg_ref, cache_b = T.decode_step(params, cache_b, tokens[:, t], cfg)
+    lg_b, _ = T.decode_step(params, cache_b, nxt, cfg)
+    assert jnp.max(jnp.abs(lg_a - lg_b)) < 2e-2
+
+
+def test_moe_capacity_drop_is_graceful():
+    """With a tiny capacity factor most tokens drop; output must stay finite
+    and shrink toward zero (dropped tokens ride the residual stream)."""
+    from repro.models import moe as moe_mod
+    from repro.models.layers import init_tree
+    cfg = get_arch("dbrx-132b").reduced()
+    tiny = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=0.05))
+    defs = moe_mod.moe_params(tiny, model_size_hint=1)
+    params = init_tree(defs, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, tiny.d_model),
+                          jnp.bfloat16)
+    out_tiny, *_ = moe_mod.moe_apply(params, x, tiny)
+    out_full, *_ = moe_mod.moe_apply(params, x, cfg)
+    assert bool(jnp.all(jnp.isfinite(out_tiny.astype(jnp.float32))))
+    n_t = float(jnp.linalg.norm(out_tiny.astype(jnp.float32)))
+    n_f = float(jnp.linalg.norm(out_full.astype(jnp.float32)))
+    assert n_t < 0.7 * n_f          # most contributions dropped
+
+
+def test_newton_schulz_quadratic_convergence():
+    """Residual should square (up to constants) per sweep."""
+    from repro.core import BlockMatrix, newton_schulz_polish, residual_norm
+    from repro.core.testing import make_spd
+    a = make_spd(64, jax.random.PRNGKey(2))
+    A = BlockMatrix.from_dense(a, 16)
+    x = jnp.linalg.inv(a) * (1 + 5e-3)
+    X = BlockMatrix.from_dense(x, 16)
+    r0 = float(residual_norm(A, X))
+    r1 = float(residual_norm(A, newton_schulz_polish(A, X, sweeps=1)))
+    r2 = float(residual_norm(A, newton_schulz_polish(A, X, sweeps=2)))
+    assert r1 < r0 ** 1.5           # superlinear
+    assert r2 <= max(r1 ** 1.5, 5e-7)
+
+
+def test_spin_shampoo_invert_spd_uses_grid():
+    """invert_spd must route through the BlockMatrix recursion for large
+    divisible dims and stay accurate."""
+    from repro.core.testing import make_spd
+    from repro.optim.spin_shampoo import _grid_for, invert_spd
+    assert _grid_for(6144) == 8      # granite-34b d_model
+    assert _grid_for(512) == 8
+    assert _grid_for(50) == 1        # odd dims -> leaf
+    m = make_spd(512, jax.random.PRNGKey(3))
+    inv = invert_spd(m, damping=1e-6)
+    resid = jnp.linalg.norm(inv @ m - jnp.eye(512)) / 512 ** 0.5
+    assert float(resid) < 1e-2
+
+
+def test_attention_chunk_knobs_change_nothing_numerically():
+    cfg = get_arch("olmo-1b").reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(0), model_size_hint=1)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab)
+    a, *_ = T.forward(params, {"tokens": tokens}, cfg, remat=False)
+    cfg2 = dataclasses.replace(cfg, attn_q_chunk=8, attn_kv_chunk=8)
+    b, *_ = T.forward(params, {"tokens": tokens}, cfg2, remat=False)
+    assert jnp.allclose(a, b, atol=2e-2)

@@ -1,0 +1,77 @@
+"""End-to-end behaviour tests for the paper's system (the claims, not the
+units): SPIN beats LU on the paper's own cost axes, the cost model orders
+them correctly, and the full framework (data -> model -> optimizer ->
+checkpoint) holds together on every architecture family."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (BlockMatrix, count_ops, lu_inverse, spin_inverse,
+                        testing)
+from repro.core.costmodel import CostParams, lu_cost, spin_cost
+
+
+def test_spin_strictly_fewer_distributed_ops_than_lu():
+    """Paper §1: SPIN needs 6 multiplies/level and 1 leaf op; LU needs more
+    multiplies and 9x leaf work. Verified on the real implementations."""
+    a = testing.make_spd(512, jax.random.PRNGKey(0))
+    A = BlockMatrix.from_dense(a, 64)           # grid 8
+    with count_ops() as s:
+        x_spin = spin_inverse(A)
+    with count_ops() as l:
+        x_lu = lu_inverse(A)
+    assert s.multiplies < l.multiplies
+    assert s.block_gemms < l.block_gemms
+    # both produce the right answer on the same substrate
+    eye = jnp.eye(512)
+    assert float(jnp.linalg.norm(x_spin.to_dense() @ a - eye)) < 1e-2
+    assert float(jnp.linalg.norm(x_lu.to_dense() @ a - eye)) < 1e-2
+
+
+def test_cost_model_predicts_the_win():
+    """Lemma 4.1 < Lemma 4.2 across the paper's sweep (Fig. 2/3 ordering)."""
+    for n in (4096, 16384):
+        for b in (4, 8, 16):
+            p = CostParams(n=n, b=b, cores=11)
+            assert spin_cost(p)["total"] < lu_cost(p)["total"]
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "dbrx-132b", "mamba2-130m",
+                                  "hymba-1.5b", "hubert-xlarge",
+                                  "phi-3-vision-4.2b"])
+def test_end_to_end_two_steps(arch):
+    """Every family trains two full steps (data -> loss -> grads -> optimizer
+    -> new params) without NaNs and with changing parameters."""
+    from repro.configs import get_arch
+    from repro.data.synthetic import TokenStream
+    from repro.runtime.trainer import TrainConfig, Trainer, init_state
+
+    cfg = get_arch(arch).reduced()
+    tcfg = TrainConfig(microbatches=2, total_steps=100, warmup=1)
+    state = init_state(cfg, tcfg, jax.random.PRNGKey(0), 1)
+    masters0 = [m.copy() for m in jax.tree.leaves(state.opt.master)]
+    tr = Trainer(cfg, tcfg, TokenStream(cfg, 4, 32, seed=0))
+    state, logs = tr.run(state, 2, log_every=0)
+    assert all(jnp.isfinite(l["loss"]) for l in logs)
+    masters1 = jax.tree.leaves(state.opt.master)
+    # compare f32 masters: bf16 params can round tiny wd-only updates away
+    changed = sum(not jnp.array_equal(a, b)
+                  for a, b in zip(masters0, masters1))
+    assert changed > len(masters0) // 2
+
+
+def test_dryrun_artifacts_when_present():
+    """If the sweep has produced cells, they must be well-formed and the
+    runnable ones must carry all roofline inputs."""
+    import glob
+    import json
+    files = glob.glob("experiments/dryrun/*.json")
+    if not files:
+        pytest.skip("dry-run sweep not executed in this checkout")
+    for f in files:
+        rec = json.load(open(f))
+        assert "arch" in rec and "shape" in rec and "mesh" in rec
+        if rec.get("runnable") and "error" not in rec:
+            assert rec["cost"]["flops"] > 0
+            assert rec["per_device"]["temp_bytes"] is not None

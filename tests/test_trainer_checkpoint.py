@@ -1,0 +1,157 @@
+"""Trainer + fault-tolerance tests: restart equivalence, atomic checkpoints,
+data-stream determinism, straggler watchdog."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import latest_step, list_steps, restore, save
+from repro.configs import get_arch
+from repro.data.synthetic import TokenStream, make_batch
+from repro.runtime.trainer import TrainConfig, Trainer, init_state
+
+
+def _tiny():
+    cfg = get_arch("olmo-1b").reduced()
+    tcfg = TrainConfig(microbatches=2, total_steps=100, warmup=2)
+    return cfg, tcfg
+
+
+def test_restart_equivalence():
+    """kill-after-2-steps + restore must equal an uninterrupted 4-step run."""
+    cfg, tcfg = _tiny()
+    with tempfile.TemporaryDirectory() as d:
+        # uninterrupted
+        s_ref = init_state(cfg, tcfg, jax.random.PRNGKey(0), 1)
+        tr = Trainer(cfg, tcfg, TokenStream(cfg, 4, 32, seed=7))
+        s_ref, _ = tr.run(s_ref, 4, log_every=0)
+
+        # interrupted at step 2 (simulated crash), then restored
+        s = init_state(cfg, tcfg, jax.random.PRNGKey(0), 1)
+        tr1 = Trainer(cfg, tcfg, TokenStream(cfg, 4, 32, seed=7),
+                      ckpt_dir=d, ckpt_every=2)
+        s, _ = tr1.run(s, 2, log_every=0)
+        del s  # "crash"
+
+        s2 = init_state(cfg, tcfg, jax.random.PRNGKey(0), 1)
+        tr2 = Trainer(cfg, tcfg, TokenStream(cfg, 4, 32, seed=7),
+                      ckpt_dir=d, ckpt_every=100)
+        s2 = tr2.maybe_restore(s2)
+        assert int(s2.step) == 2
+        assert tr2.stream.step == 2            # data position restored
+        s2, _ = tr2.run(s2, 2, log_every=0)
+
+        for a, b in zip(jax.tree.leaves(s_ref.params),
+                        jax.tree.leaves(s2.params)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=0, atol=0)
+
+
+def test_loss_decreases_on_memorizable_data():
+    cfg, tcfg = _tiny()
+    import dataclasses
+    tcfg = dataclasses.replace(
+        tcfg, warmup=1,
+        adamw=dataclasses.replace(tcfg.adamw, lr=3e-3))
+
+    class FixedStream(TokenStream):
+        def next(self):
+            key = jax.random.PRNGKey(123)      # same batch every step
+            return make_batch(self.cfg, self.batch, self.seq, key, "train")
+
+        def state_dict(self):
+            return {"seed": 0, "step": 0}
+
+    s = init_state(cfg, tcfg, jax.random.PRNGKey(0), 1)
+    tr = Trainer(cfg, tcfg, FixedStream(cfg, 4, 32))
+    s, logs = tr.run(s, 30, log_every=0)
+    assert logs[-1]["loss"] < logs[0]["loss"] - 0.5, \
+        f"{logs[0]['loss']} -> {logs[-1]['loss']}"
+
+
+def test_checkpoint_atomicity_and_bf16():
+    state = {"w": jnp.ones((4, 4), jnp.bfloat16) * 1.5,
+             "n": jnp.arange(3), "s": jnp.float32(2.5)}
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 10, state, extra={"stream": {"seed": 1, "step": 10}})
+        save(d, 20, state)
+        assert list_steps(d) == [10, 20]
+        assert latest_step(d) == 20
+        got, extra = restore(d, 10, state)
+        assert got["w"].dtype == jnp.bfloat16
+        assert jnp.array_equal(got["w"], state["w"])
+        assert extra["stream"]["step"] == 10
+        # no tmp dirs left behind
+        assert not [f for f in os.listdir(d) if f.startswith("tmp.")]
+
+
+def test_stream_determinism_and_restore():
+    cfg, _ = _tiny()
+    s1 = TokenStream(cfg, 4, 32, seed=3)
+    batches = [s1.next() for _ in range(3)]
+    s2 = TokenStream(cfg, 4, 32, seed=3)
+    s2.load_state_dict({"seed": 3, "step": 2})
+    b2 = s2.next()
+    assert jnp.array_equal(b2["tokens"], batches[2]["tokens"])
+
+
+def test_straggler_watchdog_flags_slow_steps():
+    cfg, tcfg = _tiny()
+    tr = Trainer(cfg, tcfg, TokenStream(cfg, 4, 32))
+    tr._watch(1.0, 1)
+    for i in range(5):
+        tr._watch(1.0, i + 2)
+    tr._watch(10.0, 99)                       # 10x slower than EWMA
+    assert tr.straggler_events and tr.straggler_events[-1]["step"] == 99
+
+
+def test_spin_shampoo_trains():
+    cfg, _ = _tiny()
+    tcfg = TrainConfig(microbatches=2, optimizer="spin_shampoo",
+                       total_steps=100, warmup=2)
+    s = init_state(cfg, tcfg, jax.random.PRNGKey(0), 1)
+    tr = Trainer(cfg, tcfg, TokenStream(cfg, 4, 32, seed=1))
+    s, logs = tr.run(s, 3, log_every=0)
+    assert all(np.isfinite(l["loss"]) for l in logs)
+    # factor state exists for matrix params
+    n_factors = sum(f is not None for f in s.opt.factors)
+    assert n_factors > 0
+
+
+def test_async_save_overlaps_and_persists():
+    import jax.numpy as jnp
+    from repro.checkpoint.ckpt import async_save, restore, latest_step
+    state = {"w": jnp.arange(16.0).reshape(4, 4)}
+    with tempfile.TemporaryDirectory() as d:
+        t = async_save(d, 3, state)
+        t.join(timeout=30)
+        assert latest_step(d) == 3
+        got, _ = restore(d, 3, state)
+        assert jnp.array_equal(got["w"], state["w"])
+
+
+def test_launchers_smoke():
+    """CLI launchers run end-to-end on reduced configs (subprocess)."""
+    import os
+    import subprocess
+    import sys
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, PYTHONPATH=os.path.join(repo, "src"))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "olmo-1b",
+         "--reduced", "--steps", "3", "--batch", "2", "--seq", "32",
+         "--microbatches", "1"],
+        capture_output=True, text=True, timeout=420, env=env)
+    assert r.returncode == 0, r.stderr[-500:]
+    assert "done: step 3" in r.stdout
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "mamba2-130m",
+         "--reduced", "--batch", "2", "--steps", "4"],
+        capture_output=True, text=True, timeout=420, env=env)
+    assert r.returncode == 0, r.stderr[-500:]
+    assert "tok/s" in r.stdout
