@@ -26,17 +26,18 @@ DEVICES = (1, 2, 4, 8)
 
 _CHILD = r"""
 import time, jax, jax.numpy as jnp
-from jax.sharding import PartitionSpec as P, NamedSharding, AxisType
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.compat import AxisType, make_mesh, set_mesh
 from repro.core import BlockMatrix, spin_inverse, testing
 
 n, bs, d = {n}, {bs}, {d}
 dev = jax.devices()
 shape = (d, 1) if d > 1 else (1, 1)
-mesh = jax.make_mesh(shape, ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2, devices=dev[:d])
+mesh = make_mesh(shape, ("data", "model"),
+                 axis_types=(AxisType.Auto,) * 2, devices=dev[:d])
 a = testing.make_spd(n, jax.random.PRNGKey(0))
 A = BlockMatrix.from_dense(a, bs)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     sh = NamedSharding(mesh, P("data", "model", None, None))
     Ab = jax.device_put(A.blocks, sh)
     f = jax.jit(lambda x: spin_inverse(BlockMatrix(x)).blocks)

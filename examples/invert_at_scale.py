@@ -12,8 +12,9 @@ import time
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import AxisType, make_mesh, set_mesh
 from repro.core import (BlockMatrix, multiply_engine, spin_inverse, testing)
 from repro.core.costmodel import tpu_roofline_cost
 
@@ -26,15 +27,15 @@ def main() -> None:
                     choices=["einsum", "allgather", "ring"])
     args = ap.parse_args()
 
-    mesh = jax.make_mesh((4, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2,
-                         devices=jax.devices()[:16])
+    mesh = make_mesh((4, 4), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2,
+                     devices=jax.devices()[:16])
     a = testing.make_spd(args.n, jax.random.PRNGKey(0))
     A = BlockMatrix.from_dense(a, args.block)
     print(f"n={args.n} grid={A.grid}x{A.grid} on mesh {dict(mesh.shape)} "
           f"engine={args.engine}")
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         sh = NamedSharding(mesh, P("data", "model", None, None))
         blocks = jax.device_put(A.blocks, sh)
         with multiply_engine(args.engine):

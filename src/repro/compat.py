@@ -1,0 +1,165 @@
+"""Version-portable shims over the JAX API drift between 0.4.x and ≥0.6.
+
+The sharding-in-types work moved every mesh-context / shard_map / collective
+-axis API the codebase needs. Import these names from here, never from jax
+directly (DESIGN.md §"JAX-version compatibility contract"):
+
+  name here          new JAX (≥0.6)                    0.4.x fallback
+  -----------------  --------------------------------  ------------------------
+  get_abstract_mesh  jax.sharding.get_abstract_mesh()  mesh context thread-local
+  shard_map          jax.shard_map(check_vma=…)        experimental (check_rep)
+  pvary              jax.lax.pvary                     identity (no vma typing)
+  set_mesh           jax.set_mesh(mesh)                `with mesh:` context
+  make_mesh          jax.make_mesh(axis_types=…)       drop axis_types kwarg
+  AxisType           jax.sharding.AxisType             shim enum
+  axis_size          jax.lax.axis_size(name)           lax.psum(1, name)
+  jit_shardings      PartitionSpecs pass through       wrap in NamedSharding
+
+Semantics preserved by the fallbacks:
+
+* ``get_abstract_mesh`` returns None (or an empty-shape mesh) outside any
+  mesh context; callers must handle both (``mesh is None or not mesh.shape``).
+* On 0.4.x the legacy ``check_rep`` replication checker predates the vma type
+  system and raises false positives on tiled all-gathers, so the fallback
+  always disables it; ``check_vma`` is honoured verbatim on new JAX.
+* ``pvary`` only exists to satisfy the new varying-manual-axes type checker;
+  identity is exactly correct where the checker does not exist.
+* ``axis_size`` relies on ``lax.psum`` of a Python scalar folding to the
+  static axis size — a documented JAX invariant on every version we support.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import enum
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+__all__ = [
+    "get_abstract_mesh", "shard_map", "pvary", "set_mesh", "make_mesh",
+    "AxisType", "axis_size", "jit_shardings", "pallas_tpu_compiler_params",
+]
+
+_HAS_GET_ABSTRACT_MESH = hasattr(jax.sharding, "get_abstract_mesh")
+_HAS_JAX_SHARD_MAP = hasattr(jax, "shard_map")
+_HAS_PVARY = hasattr(jax.lax, "pvary")
+_HAS_SET_MESH = hasattr(jax, "set_mesh")
+_HAS_AXIS_SIZE = hasattr(jax.lax, "axis_size")
+# Bare PartitionSpec leaves in jit in/out_shardings landed with set_mesh.
+_JIT_TAKES_PSPECS = _HAS_SET_MESH
+
+
+def get_abstract_mesh():
+    """The mesh of the innermost active mesh context, or None outside one."""
+    if _HAS_GET_ABSTRACT_MESH:
+        return jax.sharding.get_abstract_mesh()
+    from jax._src.mesh import thread_resources
+
+    mesh = thread_resources.env.physical_mesh
+    return None if mesh.empty else mesh
+
+
+def shard_map(f, *, mesh=None, in_specs, out_specs, check_vma=True):
+    """jax.shard_map with the 0.4.x experimental module as fallback."""
+    if _HAS_JAX_SHARD_MAP:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    if mesh is None:
+        mesh = get_abstract_mesh()
+    # check_rep (the pre-vma replication checker) false-positives on tiled
+    # all-gather outputs; the code this layer serves was written against the
+    # vma checker, so disable the legacy one unconditionally.
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+
+
+def pvary(x, axis_names):
+    """Mark `x` device-varying over `axis_names` (identity without vma)."""
+    if _HAS_PVARY:
+        return jax.lax.pvary(x, axis_names)
+    return x
+
+
+@contextlib.contextmanager
+def _legacy_mesh_context(mesh):
+    with mesh:
+        yield mesh
+
+
+def set_mesh(mesh):
+    """Context manager installing `mesh` as the ambient mesh."""
+    if _HAS_SET_MESH:
+        return jax.set_mesh(mesh)
+    return _legacy_mesh_context(mesh)
+
+
+if hasattr(jax.sharding, "AxisType"):
+    AxisType = jax.sharding.AxisType
+else:
+    class AxisType(enum.Enum):
+        """Stand-in for jax.sharding.AxisType (0.4.x meshes are all Auto)."""
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+try:
+    import inspect as _inspect
+    _MAKE_MESH_TAKES_AXIS_TYPES = (
+        "axis_types" in _inspect.signature(jax.make_mesh).parameters)
+except (TypeError, ValueError):
+    _MAKE_MESH_TAKES_AXIS_TYPES = False
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """jax.make_mesh, dropping `axis_types` where the kwarg doesn't exist."""
+    if _MAKE_MESH_TAKES_AXIS_TYPES:
+        return jax.make_mesh(axis_shapes, axis_names,
+                             axis_types=axis_types, devices=devices)
+    return jax.make_mesh(axis_shapes, axis_names, devices=devices)
+
+
+def axis_size(name) -> int:
+    """Static size of a manual (shard_map/pmap) axis, inside the mapped fn."""
+    if _HAS_AXIS_SIZE:
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
+def _is_pspec(x) -> bool:
+    return isinstance(x, PartitionSpec)
+
+
+def jit_shardings(tree, mesh=None):
+    """Make a pytree of PartitionSpecs acceptable to jit in/out_shardings.
+
+    New JAX takes bare specs under a mesh context; 0.4.x rejects them, so
+    wrap each spec leaf in NamedSharding against the ambient mesh. None
+    subtrees (unconstrained outputs) pass through on both.
+    """
+    if _JIT_TAKES_PSPECS:
+        return tree
+    if mesh is None:
+        mesh = get_abstract_mesh()
+    if mesh is None:
+        return tree
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if _is_pspec(s) else s,
+        tree, is_leaf=_is_pspec)
+
+
+def pallas_tpu_compiler_params(**kwargs):
+    """pltpu.CompilerParams on new JAX, pltpu.TPUCompilerParams on 0.4.x.
+
+    Same dataclass either way (dimension_semantics, has_side_effects, …);
+    only the public name moved.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)

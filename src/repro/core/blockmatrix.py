@@ -45,6 +45,8 @@ class OpCounts:
     scalar_muls: int = 0
     leaf_inversions: int = 0
     leaf_lu: int = 0
+    leaf_solves: int = 0         # grid==1 systems solved by spin_solve
+    solve_applies: int = 0       # BlockMatrix × dense-panel products (solve)
     arranges: int = 0
     splits: int = 0
 

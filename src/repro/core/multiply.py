@@ -36,6 +36,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 from .blockmatrix import BlockMatrix, _bump
 
 __all__ = ["multiply", "multiply_engine", "matmul_blocks_einsum",
@@ -95,7 +97,7 @@ def ring_matmul_panels(a_loc: jax.Array, b_loc: jax.Array, *, model_axis: str,
     BEFORE the GEMM so XLA overlaps transfer with compute.
     """
     a_full = jax.lax.all_gather(a_loc, model_axis, axis=1, tiled=True)
-    n_data = jax.lax.axis_size(data_axis)
+    n_data = compat.axis_size(data_axis)
     if n_data == 1:
         return matmul_blocks_einsum(a_full, b_loc)
     d_idx = jax.lax.axis_index(data_axis)
@@ -106,7 +108,7 @@ def ring_matmul_panels(a_loc: jax.Array, b_loc: jax.Array, *, model_axis: str,
     acc0 = jnp.zeros((bi_loc, bj_loc, bs, bs), a_loc.dtype)
     # Mark the fresh accumulator as device-varying so it can live in a carry
     # next to the (varying) rotating panel.
-    acc0 = jax.lax.pvary(acc0, (data_axis, model_axis))
+    acc0 = compat.pvary(acc0, (data_axis, model_axis))
 
     def step(t, carry):
         acc, panel = carry
@@ -122,7 +124,7 @@ def ring_matmul_panels(a_loc: jax.Array, b_loc: jax.Array, *, model_axis: str,
 
 
 def _shard_map_multiply(a: jax.Array, b: jax.Array, engine: str) -> jax.Array:
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or not mesh.shape:
         return matmul_blocks_einsum(a, b)
     axis_names = list(mesh.shape.keys())
@@ -136,7 +138,7 @@ def _shard_map_multiply(a: jax.Array, b: jax.Array, engine: str) -> jax.Array:
         return matmul_blocks_einsum(a, b)
     fn = ring_matmul_panels if engine == "ring" else allgather_matmul_panels
     local = functools.partial(fn, model_axis=model_axis, data_axis=data_axis)
-    return jax.shard_map(
+    return compat.shard_map(
         local,
         mesh=mesh,
         in_specs=(P(data_axis, model_axis, None, None),

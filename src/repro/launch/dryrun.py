@@ -21,6 +21,7 @@ import traceback
 import jax
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import jit_shardings, set_mesh
 from repro.configs import SHAPES, cell_status, get_arch, list_archs
 from repro.configs.registry import ArchConfig
 from repro.configs.shapes import ShapeConfig
@@ -233,7 +234,8 @@ def _compile_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
         built = build_decode(cfg, shape, mesh, rules)
     fn, args, in_sh, out_sh, donate = built
     t0 = time.time()
-    jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+    jitted = jax.jit(fn, in_shardings=jit_shardings(in_sh, mesh),
+                     out_shardings=jit_shardings(out_sh, mesh),
                      donate_argnums=donate)
     lowered = jitted.lower(*args)
     t1 = time.time()
@@ -282,7 +284,7 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
     chips = mesh.devices.size
     rec.update(runnable=True, chips=chips)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         # 1) the deliverable: the FULL config lowers + compiles
         compiled, lower_s, compile_s = _compile_cell(
             cfg, shape, mesh, rules, microbatches)
@@ -359,13 +361,14 @@ def run_solver_cell(n: int, block_size: int, *, multi_pod: bool,
 
     abs_blocks = jax.ShapeDtypeStruct((grid, grid, block_size, block_size),
                                       dt)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         with multiply_engine(engine):
             t0 = time.time()
+            spec = P("data", "model", None, None)
             lowered = jax.jit(
                 invert,
-                in_shardings=P("data", "model", None, None),
-                out_shardings=P("data", "model", None, None),
+                in_shardings=jit_shardings(spec, mesh),
+                out_shardings=jit_shardings(spec, mesh),
             ).lower(abs_blocks)
             t1 = time.time()
             compiled = lowered.compile()

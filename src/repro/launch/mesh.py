@@ -12,7 +12,8 @@ axis is pure data parallelism over DCN (gradient all-reduce only).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.compat import AxisType, make_mesh
 
 __all__ = ["make_production_mesh", "make_mesh_shape"]
 
@@ -34,6 +35,6 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"need {n} devices for mesh {shape}, have {len(devices)}; "
             "set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
             "BEFORE importing jax (launch/dryrun.py does this)")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes),
-                         devices=devices)
+    return make_mesh(shape, axes,
+                     axis_types=(AxisType.Auto,) * len(axes),
+                     devices=devices)

@@ -62,7 +62,8 @@ def main() -> None:
     mesh_ctx = None
     if args.mesh != "none":
         from repro.launch.mesh import make_production_mesh
-        mesh_ctx = jax.set_mesh(make_production_mesh(
+        from repro.compat import set_mesh
+        mesh_ctx = set_mesh(make_production_mesh(
             multi_pod=args.mesh == "multi"))
         mesh_ctx.__enter__()
 

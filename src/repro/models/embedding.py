@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 __all__ = ["embed_lookup"]
 
 
@@ -42,7 +44,7 @@ def embed_lookup(embed: jax.Array, tokens: jax.Array) -> jax.Array:
 
     Returns (..., d) embeddings, batch-sharded like `tokens`.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or not mesh.shape:
         return jnp.take(embed, tokens, axis=0)
     axes = dict(mesh.shape)
@@ -66,7 +68,7 @@ def embed_lookup(embed: jax.Array, tokens: jax.Array) -> jax.Array:
     # check_vma=False: the tiled all_gather's output is typed "varying over
     # data" by the static checker even though it is replicated by
     # construction; the psum over model similarly clears model-variance.
-    return jax.shard_map(
+    return compat.shard_map(
         fn, mesh=mesh,
         in_specs=(P(model_axis, data_axis), tok_spec),
         out_specs=out_spec, check_vma=False,

@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.registry import ArchConfig, MoEConfig
 from repro.parallel.sharding import ShardingRules, DEFAULT_RULES
 from .layers import ParamDef
@@ -80,7 +81,7 @@ def _moe_local(x_loc, router_w, wi, wg, wo, shared, *, cfg: ArchConfig,
                batch_axes: tuple[str, ...] = ()):
     """Per-shard MoE body. Works standalone (M=1) and inside shard_map."""
     moe = cfg.moe
-    m_size = jax.lax.axis_size(model_axis) if model_axis else 1
+    m_size = compat.axis_size(model_axis) if model_axis else 1
     e_pad = wi.shape[0] * m_size
     e_loc = wi.shape[0]
     bsz, s, d = x_loc.shape
@@ -186,7 +187,7 @@ def moe_apply(params: dict, x: jax.Array, cfg: ArchConfig,
               rules: ShardingRules = DEFAULT_RULES
               ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """x: (B, S, d) -> (out, load_balance_aux, router_z_loss)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     shared = params.get("shared")
     if mesh is None or not mesh.shape or mesh.shape.get("model", 1) == 1:
         return _moe_local(x, params["router"], params["wi"], params["wg"],
@@ -220,7 +221,7 @@ def moe_apply(params: dict, x: jax.Array, cfg: ArchConfig,
     # "varying" by the static checker; the dispatch round-trip returns each
     # token to its owning shard and aux losses are pmean'd over the batch
     # axes, so the declared out_specs hold by construction.
-    out, aux, z = jax.shard_map(
+    out, aux, z = compat.shard_map(
         fn,
         mesh=mesh,
         in_specs=(P(bspec, seq_axis, None),                   # x

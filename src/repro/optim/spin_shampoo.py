@@ -28,7 +28,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import BlockMatrix, spin_inverse
+from repro.core import (solve_grid_for, spin_inverse_batched,
+                        spin_inverse_dense)
 from .adamw import global_norm
 
 __all__ = ["SpinShampooConfig", "spin_shampoo_init", "spin_shampoo_update",
@@ -47,32 +48,23 @@ class SpinShampooConfig:
     grafting: bool = True           # graft step norm onto Adam's (stability)
 
 
-def _grid_for(n: int, max_grid: int = 8) -> int:
-    """Largest power-of-two grid ≤ max_grid that divides n (1 = leaf only)."""
-    g = 1
-    while g * 2 <= max_grid and n % (g * 2) == 0 and n // (g * 2) >= 64:
-        g *= 2
-    return g
-
-
 def invert_spd(mat: jax.Array, damping: float) -> jax.Array:
     """(mat + λ·tr/n·I)⁻¹ via distributed SPIN (leaf fallback for odd dims).
 
     Damping is scaled by the mean eigenvalue (trace/n) so it is invariant to
-    the gradient scale, the standard Shampoo/K-FAC choice.
+    the gradient scale, the standard Shampoo/K-FAC choice. Stacked-layer
+    factors (L, d, d) go through `spin_inverse_batched` — one compiled SPIN
+    program for the whole stack instead of L unrolled copies.
     """
     n = mat.shape[-1]
     lam = damping * (jnp.trace(mat, axis1=-2, axis2=-1) / n + 1e-12)
     damped = mat + lam[..., None, None] * jnp.eye(n, dtype=mat.dtype)
 
-    def one(m):
-        g = _grid_for(n)
-        a = BlockMatrix.from_dense(m.astype(jnp.float32), n // g)
-        return spin_inverse(a).to_dense().astype(mat.dtype)
-
+    bs = n // solve_grid_for(n)
+    damped32 = damped.astype(jnp.float32)
     if mat.ndim == 2:
-        return one(damped)
-    return jax.vmap(one)(damped)
+        return spin_inverse_dense(damped32, bs).astype(mat.dtype)
+    return spin_inverse_batched(damped32, bs).astype(mat.dtype)
 
 
 class _Factor(NamedTuple):

@@ -18,6 +18,8 @@ from typing import Optional, Union
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
+
 __all__ = ["ShardingRules", "DEFAULT_RULES", "logical_spec", "shard",
            "named_sharding", "mesh_axis_size"]
 
@@ -86,7 +88,7 @@ def logical_spec(shape: tuple[int, ...], logical: tuple[Optional[str], ...],
     axis once) — order the logical tuple by sharding priority.
     """
     if mesh is None:
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = compat.get_abstract_mesh()
     axes = _mesh_axes(mesh)
     if len(shape) != len(logical):
         raise ValueError(f"rank mismatch: shape {shape} vs logical {logical}")
@@ -98,7 +100,7 @@ def logical_spec(shape: tuple[int, ...], logical: tuple[Optional[str], ...],
 def shard(x: jax.Array, *logical: Optional[str],
           rules: ShardingRules = DEFAULT_RULES) -> jax.Array:
     """with_sharding_constraint under the current mesh (no-op without one)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or not mesh.shape:
         return x
     spec = logical_spec(x.shape, logical, rules, mesh)
@@ -112,7 +114,7 @@ def named_sharding(mesh: Mesh, shape: tuple[int, ...],
 
 
 def mesh_axis_size(name: str) -> int:
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or name not in mesh.shape:
         return 1
     return mesh.shape[name]

@@ -1,0 +1,200 @@
+"""SPIN conformance suite: BlockMatrix invariants across grids 1–8, the
+paper's per-level op-count oracle, and the batched/multi-RHS solve subsystem
+(core/solve.py + core/verify.py)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BlockMatrix, count_ops, spin_inverse,
+                        spin_inverse_batched, spin_inverse_dense, spin_solve,
+                        spin_solve_dense)
+from repro.core.testing import (MATRIX_FAMILIES, make_spd, make_spd_batch)
+from repro.core import verify
+
+
+# ---------------------------------------------------------------------------
+# BlockMatrix invariants, grids 1–8
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=16, deadline=None)
+@given(st.sampled_from([1, 2, 3, 4, 5, 6, 7, 8]),
+       st.sampled_from([4, 16]), st.integers(0, 2 ** 31 - 1))
+def test_from_dense_roundtrip_grids_1_to_8(grid, bs, seed):
+    n = grid * bs
+    dense = jax.random.normal(jax.random.PRNGKey(seed), (n, n))
+    bm = BlockMatrix.from_dense(dense, bs)
+    assert bm.grid == grid and bm.block_size == bs and bm.n == n
+    assert jnp.array_equal(bm.to_dense(), dense)
+
+
+@settings(max_examples=16, deadline=None)
+@given(st.sampled_from([2, 4, 6, 8]), st.integers(0, 2 ** 31 - 1))
+def test_split_arrange_identity_even_grids(grid, seed):
+    n = grid * 8
+    dense = jax.random.normal(jax.random.PRNGKey(seed), (n, n))
+    bm = BlockMatrix.from_dense(dense, 8)
+    back = BlockMatrix.arrange(*bm.split())
+    assert jnp.array_equal(back.to_dense(), dense)
+
+
+@pytest.mark.parametrize("grid", [1, 3, 5, 7])
+def test_split_odd_grid_raises(grid):
+    bm = BlockMatrix.from_dense(jnp.eye(grid * 4), 4)
+    with pytest.raises(ValueError):
+        bm.split()
+
+
+# ---------------------------------------------------------------------------
+# Paper op counts: 6 multiplies / 2 subtracts / 1 scalarMul per level node,
+# one leaf inversion per leaf — grids 1, 2, 4, 8
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("grid", [1, 2, 4, 8])
+def test_spin_op_counts_match_paper(grid):
+    bs = 16
+    a = make_spd(grid * bs, jax.random.PRNGKey(grid))
+    with count_ops() as c:
+        spin_inverse(BlockMatrix.from_dense(a, bs))
+    verify.assert_paper_op_counts(grid, c)
+    want = verify.expected_spin_counts(grid)
+    assert c.multiplies == 6 * (grid - 1)
+    assert c.subtracts == 2 * (grid - 1)
+    assert c.scalar_muls == grid - 1
+    assert c.leaf_inversions == grid
+    assert c.block_gemms == want.block_gemms
+
+
+def test_op_count_oracle_rejects_divergence():
+    counts = verify.expected_spin_counts(4)
+    counts.multiplies += 1
+    with pytest.raises(AssertionError):
+        verify.assert_paper_op_counts(4, counts)
+
+
+def test_expected_counts_rejects_non_pow2():
+    with pytest.raises(ValueError):
+        verify.expected_spin_counts(3)
+
+
+# ---------------------------------------------------------------------------
+# spin_solve: multi-RHS residuals on SPD systems, grids {2, 4, 8}
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("grid", [2, 4, 8])
+@pytest.mark.parametrize("n_rhs", [1, 4])
+def test_spin_solve_residual_f32(grid, n_rhs):
+    bs = 32
+    n = grid * bs
+    a = make_spd(n, jax.random.PRNGKey(grid * 10 + n_rhs))
+    b = jax.random.normal(jax.random.PRNGKey(1), (n, n_rhs))
+    x = spin_solve_dense(a, b, bs)
+    assert verify.solve_residual(a, x, b) < 1e-3
+
+
+def test_spin_solve_matches_inverse_path():
+    n, bs = 256, 64
+    a = make_spd(n, jax.random.PRNGKey(0))
+    b = jax.random.normal(jax.random.PRNGKey(1), (n, 3))
+    x_solve = spin_solve_dense(a, b, bs)
+    x_inv = spin_inverse_dense(a, bs) @ b
+    assert jnp.allclose(x_solve, x_inv, atol=1e-4)
+
+
+def test_spin_solve_vector_rhs():
+    n, bs = 128, 32
+    a = make_spd(n, jax.random.PRNGKey(2))
+    b = jax.random.normal(jax.random.PRNGKey(3), (n,))
+    x = spin_solve(BlockMatrix.from_dense(a, bs), b)
+    assert x.shape == (n,)
+    assert float(jnp.linalg.norm(a @ x - b) / jnp.linalg.norm(b)) < 1e-4
+
+
+def test_spin_solve_validates_inputs():
+    a = BlockMatrix.from_dense(make_spd(96, jax.random.PRNGKey(0)), 32)
+    with pytest.raises(ValueError):                       # grid 3
+        spin_solve(a, jnp.ones((96, 2)))
+    a2 = BlockMatrix.from_dense(make_spd(64, jax.random.PRNGKey(0)), 32)
+    with pytest.raises(ValueError):                       # rhs rows mismatch
+        spin_solve(a2, jnp.ones((96, 2)))
+
+
+def test_spin_solve_never_materializes_inverse_op_profile():
+    """The solve path performs NO BlockMatrix multiplies or arranges — only
+    panel applies + recursive leaf solves (the inverse-free claim)."""
+    n, bs = 256, 32
+    a = BlockMatrix.from_dense(make_spd(n, jax.random.PRNGKey(4)), bs)
+    with count_ops() as c:
+        spin_solve(a, jnp.ones((n, 2)))
+    grid = n // bs
+    assert c.multiplies == 0
+    assert c.arranges == 0
+    assert c.leaf_inversions == 0
+    assert c.leaf_solves == grid                 # one per leaf system
+    assert c.splits == grid - 1                  # one per internal node
+    assert c.solve_applies == 3 * (grid - 1)     # A21·III, A21·Y1, III·X2
+    assert c.subtracts == 3 * (grid - 1)         # V, rhs2, X1
+
+
+# ---------------------------------------------------------------------------
+# spin_inverse_batched
+# ---------------------------------------------------------------------------
+
+
+def test_spin_inverse_batched_matches_per_matrix_exactly():
+    batch = make_spd_batch(4, 128, jax.random.PRNGKey(7))
+    got = spin_inverse_batched(batch, 32)
+    per = jnp.stack([spin_inverse_dense(batch[i], 32)
+                     for i in range(batch.shape[0])])
+    assert jnp.array_equal(got, per)
+
+
+def test_spin_inverse_batched_rejects_2d():
+    with pytest.raises(ValueError):
+        spin_inverse_batched(jnp.eye(64), 32)
+
+
+def test_shampoo_invert_spd_batched_path():
+    from repro.optim.spin_shampoo import invert_spd
+    stack = make_spd_batch(3, 128, jax.random.PRNGKey(9))
+    inv = invert_spd(stack, damping=1e-6)
+    eye = jnp.eye(128)
+    for i in range(3):
+        r = jnp.linalg.norm(inv[i] @ stack[i] - eye) / 128 ** 0.5
+        assert float(r) < 1e-2
+
+
+# ---------------------------------------------------------------------------
+# Conformance sweep over the matrix-family zoo
+# ---------------------------------------------------------------------------
+
+
+def test_zoo_families_are_spd_or_invertible():
+    key = jax.random.PRNGKey(0)
+    for name, gen in MATRIX_FAMILIES.items():
+        kwargs = {"band": 32} if name == "block_banded_spd" else {}
+        a = gen(128, key, **kwargs)
+        assert a.shape == (128, 128)
+        if name != "diag_dominant":                # SPD families: λmin > 0
+            evals = jnp.linalg.eigvalsh(a.astype(jnp.float32))
+            assert float(evals[0]) > 0, name
+
+
+def test_run_conformance_all_green():
+    reports = verify.run_conformance(grids=(2, 4, 8))
+    bad = [r for r in reports if not r.ok]
+    assert not bad, [
+        (r.family, r.grid, r.inverse_residual, r.solve_residual)
+        for r in bad]
+
+
+def test_residual_tolerance_is_dtype_aware():
+    assert verify.residual_tolerance(jnp.float32) == 1e-3
+    assert verify.residual_tolerance(jnp.bfloat16) > \
+        verify.residual_tolerance(jnp.float32)
+    with pytest.raises(ValueError):
+        verify.residual_tolerance(jnp.int32)

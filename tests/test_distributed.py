@@ -28,15 +28,16 @@ def run_py(code: str, devices: int = 16, timeout: int = 420) -> str:
 def test_multiply_engines_and_spin_on_mesh():
     out = run_py("""
         import jax, jax.numpy as jnp
-        from jax.sharding import PartitionSpec as P, NamedSharding, AxisType
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.compat import AxisType, make_mesh, set_mesh
         from repro.core import BlockMatrix, multiply_engine, testing, \\
             spin_inverse, lu_inverse, multiply
 
-        mesh = jax.make_mesh((4, 4), ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+        mesh = make_mesh((4, 4), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
         a = testing.make_spd(512, jax.random.PRNGKey(1))
         A = BlockMatrix.from_dense(a, 64)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             sh = NamedSharding(mesh, P("data", "model", None, None))
             Ab = jax.device_put(A.blocks, sh)
             for eng in ("einsum", "allgather", "ring"):
@@ -62,7 +63,8 @@ def test_moe_ep_matches_local():
     reference bit-for-bit in routing semantics (same capacity, same gates)."""
     out = run_py("""
         import jax, jax.numpy as jnp
-        from jax.sharding import PartitionSpec as P, NamedSharding, AxisType
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.compat import AxisType, make_mesh, set_mesh
         from repro.configs import get_arch
         from repro.models import moe as moe_mod
         from repro.models.layers import init_tree
@@ -76,9 +78,9 @@ def test_moe_ep_matches_local():
                               jnp.float32).astype(jnp.bfloat16)
         ref, aux_ref, z_ref = moe_mod.moe_apply(params, x, cfg)
 
-        mesh = jax.make_mesh((4, 4), ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
-        with jax.set_mesh(mesh):
+        mesh = make_mesh((4, 4), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+        with set_mesh(mesh):
             got, aux, z = jax.jit(
                 lambda p, x: moe_mod.moe_apply(p, x, cfg))(params, x)
         err = jnp.max(jnp.abs(got.astype(jnp.float32)
@@ -97,16 +99,16 @@ def test_moe_ep_matches_local():
 def test_embed_lookup_sharded_matches_take():
     out = run_py("""
         import jax, jax.numpy as jnp
-        from jax.sharding import AxisType
+        from repro.compat import AxisType, make_mesh, set_mesh
         from repro.models.embedding import embed_lookup
 
         emb = jax.random.normal(jax.random.PRNGKey(0), (64, 32),
                                 jnp.float32)
         toks = jax.random.randint(jax.random.PRNGKey(1), (8, 12), 0, 64)
         want = jnp.take(emb, toks, axis=0)
-        mesh = jax.make_mesh((4, 4), ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
-        with jax.set_mesh(mesh):
+        mesh = make_mesh((4, 4), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+        with set_mesh(mesh):
             got = jax.jit(embed_lookup)(emb, toks)
         assert jnp.allclose(got, want, atol=1e-6)
         print("OK")
@@ -118,22 +120,23 @@ def test_elastic_checkpoint_restore_across_meshes():
     """Save sharded on a 2x2 mesh, restore onto 8-way — elastic rescale."""
     out = run_py("""
         import tempfile, jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import PartitionSpec as P, NamedSharding, AxisType
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.compat import AxisType, make_mesh
         from repro.checkpoint.ckpt import save, restore
 
         devs = jax.devices()
-        mesh_a = jax.make_mesh((2, 2), ("data", "model"),
-                               axis_types=(AxisType.Auto,)*2,
-                               devices=devs[:4])
+        mesh_a = make_mesh((2, 2), ("data", "model"),
+                           axis_types=(AxisType.Auto,)*2,
+                           devices=devs[:4])
         w = jnp.arange(64 * 8, dtype=jnp.float32).reshape(64, 8)
         w_sharded = jax.device_put(
             w, NamedSharding(mesh_a, P("data", "model")))
         state = {"w": w_sharded, "step": jnp.int32(5)}
         with tempfile.TemporaryDirectory() as d:
             save(d, 5, state)
-            mesh_b = jax.make_mesh((8,), ("data",),
-                                   axis_types=(AxisType.Auto,),
-                                   devices=devs[:8])
+            mesh_b = make_mesh((8,), ("data",),
+                               axis_types=(AxisType.Auto,),
+                               devices=devs[:8])
             shardings = {"w": NamedSharding(mesh_b, P("data", None)),
                          "step": NamedSharding(mesh_b, P())}
             got, _ = restore(d, 5, state, shardings=shardings)
@@ -147,13 +150,14 @@ def test_elastic_checkpoint_restore_across_meshes():
 def test_compressed_psum_pod_axis():
     out = run_py("""
         import jax, jax.numpy as jnp, functools
-        from jax.sharding import PartitionSpec as P, AxisType
+        from jax.sharding import PartitionSpec as P
+        from repro.compat import AxisType, make_mesh, set_mesh, shard_map
         from repro.parallel.compression import compressed_psum
 
-        mesh = jax.make_mesh((4,), ("pod",), axis_types=(AxisType.Auto,))
+        mesh = make_mesh((4,), ("pod",), axis_types=(AxisType.Auto,))
         x = jax.random.normal(jax.random.PRNGKey(0), (4, 64))
-        with jax.set_mesh(mesh):
-            got = jax.jit(jax.shard_map(
+        with set_mesh(mesh):
+            got = jax.jit(shard_map(
                 functools.partial(compressed_psum, axis_name="pod"),
                 mesh=mesh, in_specs=P("pod", None), out_specs=P(None, None),
                 check_vma=False))(x)

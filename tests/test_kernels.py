@@ -24,7 +24,10 @@ def test_matmul_sweep(m, k, n, dtype):
     want = mm_ref.matmul_ref(a, b)
     assert got.dtype == want.dtype
     err = jnp.max(jnp.abs(got.astype(jnp.float32) - want.astype(jnp.float32)))
-    assert float(err) < 1e-3
+    # bf16 storage rounds the f32 accumulator: the kernel's tiled-k partial
+    # sums may land one output ulp away from the monolithic-dot oracle.
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-3
+    assert float(err) < tol, float(err)
 
 
 @settings(max_examples=10, deadline=None)

@@ -95,10 +95,11 @@ def test_spin_shampoo_invert_spd_uses_grid():
     """invert_spd must route through the BlockMatrix recursion for large
     divisible dims and stay accurate."""
     from repro.core.testing import make_spd
-    from repro.optim.spin_shampoo import _grid_for, invert_spd
-    assert _grid_for(6144) == 8      # granite-34b d_model
-    assert _grid_for(512) == 8
-    assert _grid_for(50) == 1        # odd dims -> leaf
+    from repro.core import solve_grid_for
+    from repro.optim.spin_shampoo import invert_spd
+    assert solve_grid_for(6144) == 8      # granite-34b d_model
+    assert solve_grid_for(512) == 8
+    assert solve_grid_for(50) == 1        # odd dims -> leaf
     m = make_spd(512, jax.random.PRNGKey(3))
     inv = invert_spd(m, damping=1e-6)
     resid = jnp.linalg.norm(inv @ m - jnp.eye(512)) / 512 ** 0.5
