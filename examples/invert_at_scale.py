@@ -17,28 +17,41 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.compat import AxisType, make_mesh, set_mesh
 from repro.core import (BlockMatrix, multiply_engine, spin_inverse, testing)
 from repro.core.costmodel import tpu_roofline_cost
+from repro.planner import get_plan
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=2048)
-    ap.add_argument("--block", type=int, default=128)
-    ap.add_argument("--engine", default="ring",
-                    choices=["einsum", "allgather", "ring"])
+    ap.add_argument("--block", type=int, default=None,
+                    help="block size override (default: planner auto-tunes)")
+    ap.add_argument("--engine", default=None,
+                    choices=["einsum", "allgather", "ring"],
+                    help="multiply engine override (default: planner)")
     args = ap.parse_args()
 
     mesh = make_mesh((4, 4), ("data", "model"),
                      axis_types=(AxisType.Auto,) * 2,
                      devices=jax.devices()[:16])
+    # Plan before device_put: the signature sees the 16 (fake) devices, so
+    # the candidate space includes the allgather/ring SUMMA engines.
+    if args.block is None or args.engine is None:
+        plan = get_plan("inverse", args.n, jnp.float32)
+        block = args.block or plan.block_size
+        engine = args.engine or plan.multiply_engine
+        print(f"planner [{plan.source}]: block={plan.block_size} "
+              f"engine={plan.multiply_engine} leaf={plan.leaf_solver}")
+    else:
+        block, engine = args.block, args.engine
     a = testing.make_spd(args.n, jax.random.PRNGKey(0))
-    A = BlockMatrix.from_dense(a, args.block)
+    A = BlockMatrix.from_dense(a, block)
     print(f"n={args.n} grid={A.grid}x{A.grid} on mesh {dict(mesh.shape)} "
-          f"engine={args.engine}")
+          f"engine={engine}")
 
     with set_mesh(mesh):
         sh = NamedSharding(mesh, P("data", "model", None, None))
         blocks = jax.device_put(A.blocks, sh)
-        with multiply_engine(args.engine):
+        with multiply_engine(engine):
             f = jax.jit(lambda x: spin_inverse(BlockMatrix(x)).blocks)
             jax.block_until_ready(f(blocks))      # compile
             t0 = time.perf_counter()

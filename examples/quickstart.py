@@ -1,5 +1,9 @@
 """Quickstart: invert a matrix with SPIN, check accuracy, count the ops.
 
+By default the planner (repro.planner) picks the block grid and leaf solver
+from the paper's §4 cost model, refined by a short microbenchmark on small
+problems; pass --block to override it by hand.
+
     PYTHONPATH=src python examples/quickstart.py [--n 1024] [--block 128]
 """
 
@@ -12,38 +16,50 @@ import jax.numpy as jnp
 from repro.core import (BlockMatrix, count_ops, lu_inverse_dense,
                         newton_schulz_polish, residual_norm, spin_inverse,
                         spin_inverse_dense, testing)
+from repro.planner import get_plan
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=1024)
-    ap.add_argument("--block", type=int, default=128)
+    ap.add_argument("--block", type=int, default=None,
+                    help="block size override (default: planner auto-tunes)")
     args = ap.parse_args()
 
-    print(f"SPD test matrix n={args.n}, block={args.block} "
-          f"(grid {args.n // args.block}x{args.n // args.block})")
     a = testing.make_spd(args.n, jax.random.PRNGKey(0))
+
+    if args.block is None:
+        plan = get_plan("inverse", args.n, a.dtype)
+        block, leaf = plan.block_size, plan.leaf_solver
+        print(f"planner [{plan.source}]: block={block} "
+              f"(grid {args.n // block}x{args.n // block}) leaf={leaf} "
+              f"engine={plan.multiply_engine}")
+    else:
+        block, leaf = args.block, "linalg"
+        print(f"explicit override: block={block} "
+              f"(grid {args.n // block}x{args.n // block})")
+    print(f"SPD test matrix n={args.n}, block={block}")
 
     # --- SPIN (the paper's algorithm) -------------------------------------
     t0 = time.perf_counter()
-    inv = jax.block_until_ready(spin_inverse_dense(a, args.block))
+    inv = jax.block_until_ready(spin_inverse_dense(a, block, leaf))
     t_compile = time.perf_counter() - t0
     t0 = time.perf_counter()
-    inv = jax.block_until_ready(spin_inverse_dense(a, args.block))
+    inv = jax.block_until_ready(spin_inverse_dense(a, block, leaf))
     t_spin = time.perf_counter() - t0
     resid = jnp.linalg.norm(inv @ a - jnp.eye(args.n)) / args.n ** 0.5
     print(f"SPIN:  {t_spin * 1e3:8.1f} ms   ||AX-I||/sqrt(n) = {resid:.2e} "
           f"(first call incl. compile: {t_compile * 1e3:.0f} ms)")
 
     # --- LU baseline (Liu et al., the paper's comparison) ------------------
-    _ = jax.block_until_ready(lu_inverse_dense(a, args.block))
+    _ = jax.block_until_ready(lu_inverse_dense(a, block))
     t0 = time.perf_counter()
-    _ = jax.block_until_ready(lu_inverse_dense(a, args.block))
+    _ = jax.block_until_ready(lu_inverse_dense(a, block))
     t_lu = time.perf_counter() - t0
     print(f"LU:    {t_lu * 1e3:8.1f} ms   -> SPIN speedup {t_lu / t_spin:.2f}x")
 
     # --- op accounting (the paper's Table 1 claim) -------------------------
-    A = BlockMatrix.from_dense(a, args.block)
+    A = BlockMatrix.from_dense(a, block)
     with count_ops() as spin_ops:
         x = spin_inverse(A)
     print(f"SPIN distributed multiplies: {spin_ops.multiplies} "

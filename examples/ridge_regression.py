@@ -7,7 +7,8 @@ SOLVED with `spin_solve` — the inverse-free path through the paper's
 recursion (A⁻¹ is never materialized; for one RHS that skips half the
 quadrant multiplies). `--multi-target` demonstrates the multi-RHS case
 (one solve for many regression targets), and `--inverse` keeps the original
-invert-then-multiply path for comparison.
+invert-then-multiply path for comparison. The block grid is autotuned by
+the planner unless --block overrides it.
 
     PYTHONPATH=src python examples/ridge_regression.py --features 1024
 """
@@ -20,13 +21,15 @@ import jax.numpy as jnp
 
 from repro.core import (BlockMatrix, newton_schulz_polish, spin_inverse,
                         spin_solve)
+from repro.planner import get_plan
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--samples", type=int, default=4096)
     ap.add_argument("--features", type=int, default=1024)
-    ap.add_argument("--block", type=int, default=128)
+    ap.add_argument("--block", type=int, default=None,
+                    help="block size override (default: planner auto-tunes)")
     ap.add_argument("--lam", type=float, default=1e-2)
     ap.add_argument("--multi-target", type=int, default=1,
                     help="number of regression targets (multi-RHS solve)")
@@ -45,8 +48,17 @@ def main() -> None:
     gram = x.T @ x + args.lam * jnp.eye(args.features)
     rhs = x.T @ y                                  # (features, targets)
 
+    if args.block is None:
+        kind = "inverse" if args.inverse else "solve"
+        plan = get_plan(kind, args.features, gram.dtype)
+        block = plan.block_size
+        print(f"planner [{plan.source}]: block={block} "
+              f"(grid {args.features // block}) leaf={plan.leaf_solver}")
+    else:
+        block = args.block
+
     t0 = time.perf_counter()
-    a = BlockMatrix.from_dense(gram, args.block)
+    a = BlockMatrix.from_dense(gram, block)
     if args.inverse:
         inv = spin_inverse(a)
         inv = newton_schulz_polish(a, inv, sweeps=1)

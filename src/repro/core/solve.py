@@ -27,12 +27,14 @@ needs (L, d, d) — compiling ONE program for the batch instead of L.
 
 from __future__ import annotations
 
+import contextlib
 import functools
 
 import jax
 import jax.numpy as jnp
 
 from .blockmatrix import BlockMatrix, _bump
+from .multiply import multiply_engine
 from .spin import LEAF_SOLVERS, spin_inverse_dense
 
 __all__ = ["spin_solve", "spin_solve_dense", "spin_inverse_batched",
@@ -40,7 +42,12 @@ __all__ = ["spin_solve", "spin_solve_dense", "spin_inverse_batched",
 
 
 def solve_grid_for(n: int, max_grid: int = 8, min_block: int = 64) -> int:
-    """Largest power-of-two grid ≤ max_grid dividing n with blocks ≥ min_block."""
+    """Largest power-of-two grid ≤ max_grid dividing n with blocks ≥ min_block.
+
+    Legacy manual heuristic, kept as a public utility for callers that want
+    a grid without consulting the planner; production paths now use
+    `repro.planner.planned_block_size` (cost-model-driven) instead.
+    """
     g = 1
     while (g * 2 <= max_grid and n % (g * 2) == 0
            and n // (g * 2) >= min_block):
@@ -116,13 +123,19 @@ def _solve(a: BlockMatrix, b: jax.Array, leaf_solver: str) -> jax.Array:
 
 
 def spin_solve(a: BlockMatrix, b: jax.Array, *,
-               leaf_solver: str = "linalg") -> jax.Array:
+               leaf_solver: str = "linalg", auto: bool = False) -> jax.Array:
     """Solve A X = B for multi-RHS B via the inverse-free SPIN recursion.
 
     a: BlockMatrix with power-of-two grid (SPD / leading-blocks-invertible,
        the paper's class). b: (n, k) or (n,) right-hand side(s).
-    Returns X with b's shape; never materializes A⁻¹.
+    Returns X with b's shape; never materializes A⁻¹. auto=True asks the
+    planner for the leaf solver (the grid is fixed by `a`'s structure).
     """
+    if auto:
+        from repro.planner import planned_leaf_solver
+
+        leaf_solver = planned_leaf_solver(a.n, a.block_size, a.dtype,
+                                          kind="solve")
     grid = a.grid
     if grid & (grid - 1):
         raise ValueError(f"grid must be a power of two, got {grid}")
@@ -134,18 +147,44 @@ def spin_solve(a: BlockMatrix, b: jax.Array, *,
     return x[:, 0] if vector else x
 
 
-@functools.partial(jax.jit, static_argnames=("block_size", "leaf_solver"))
-def spin_solve_dense(a: jax.Array, b: jax.Array, block_size: int,
-                     leaf_solver: str = "linalg") -> jax.Array:
-    """Convenience: dense (n,n) A, (n,k) B -> X, jitted end to end."""
-    return spin_solve(BlockMatrix.from_dense(a, block_size), b,
-                      leaf_solver=leaf_solver)
+@functools.partial(jax.jit,
+                   static_argnames=("block_size", "leaf_solver", "engine"))
+def _spin_solve_dense(a: jax.Array, b: jax.Array, block_size: int,
+                      leaf_solver: str = "linalg",
+                      engine: str | None = None) -> jax.Array:
+    # `engine` is static for the same reason as in _spin_inverse_dense: the
+    # multiply engine is resolved at trace time from a contextvar.
+    ctx = multiply_engine(engine) if engine else contextlib.nullcontext()
+    with ctx:
+        return spin_solve(BlockMatrix.from_dense(a, block_size), b,
+                          leaf_solver=leaf_solver)
 
 
-@functools.partial(jax.jit, static_argnames=("block_size", "leaf_solver"))
-def spin_inverse_batched(batch: jax.Array, block_size: int,
+def spin_solve_dense(a: jax.Array, b: jax.Array,
+                     block_size: int | None = None,
+                     leaf_solver: str = "linalg", *,
+                     engine: str | None = None,
+                     auto: bool = False) -> jax.Array:
+    """Convenience: dense (n,n) A, (n,k) B -> X, jitted end to end.
+
+    auto=True (or block_size=None) routes through the planner; the planned
+    path re-enters this function with explicit static arguments, so it is
+    bitwise identical to the equivalent explicit call. engine=None inherits
+    the ambient `multiply_engine` context.
+    """
+    if auto or block_size is None:
+        from repro.planner import plan_solve
+
+        return plan_solve(a, b)
+    return _spin_solve_dense(a, b, block_size, leaf_solver, engine)
+
+
+def spin_inverse_batched(batch: jax.Array, block_size: int | None = None,
                          leaf_solver: str = "linalg") -> jax.Array:
     """SPIN-invert a (batch, n, n) stack of SPD matrices in one program.
+
+    block_size=None asks the planner (cost-model path, no measurement —
+    safe under an enclosing jit trace) for the per-matrix block size.
 
     Uses lax.map (a scan over the leading axis) rather than vmap: the scan
     body is the SAME traced computation as `spin_inverse_dense`, so each
@@ -159,6 +198,16 @@ def spin_inverse_batched(batch: jax.Array, block_size: int,
     """
     if batch.ndim != 3:
         raise ValueError(f"expected (batch, n, n), got {batch.shape}")
+    if block_size is None:
+        from repro.planner import planned_block_size
+
+        block_size = planned_block_size(batch.shape[-1], batch.dtype)
+    return _spin_inverse_batched(batch, block_size, leaf_solver)
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "leaf_solver"))
+def _spin_inverse_batched(batch: jax.Array, block_size: int,
+                          leaf_solver: str = "linalg") -> jax.Array:
     fn = functools.partial(spin_inverse_dense, block_size=block_size,
                            leaf_solver=leaf_solver)
     return jax.lax.map(fn, batch)

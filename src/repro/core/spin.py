@@ -28,6 +28,7 @@ DESIGN.md §9.
 
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Callable
 
@@ -35,7 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from .blockmatrix import BlockMatrix, _bump
-from .multiply import multiply
+from .multiply import multiply, multiply_engine
 
 __all__ = ["spin_inverse", "spin_inverse_dense", "leaf_inverse", "LEAF_SOLVERS"]
 
@@ -92,8 +93,18 @@ def leaf_inverse(a: BlockMatrix, solver: str = "linalg") -> BlockMatrix:
 # ---------------------------------------------------------------------------
 
 
-def spin_inverse(a: BlockMatrix, *, leaf_solver: str = "linalg") -> BlockMatrix:
-    """Distributed Strassen inversion of a BlockMatrix (grid must be 2^m)."""
+def spin_inverse(a: BlockMatrix, *, leaf_solver: str = "linalg",
+                 auto: bool = False) -> BlockMatrix:
+    """Distributed Strassen inversion of a BlockMatrix (grid must be 2^m).
+
+    auto=True consults the planner (repro.planner) for the leaf solver —
+    the block grid is already fixed by `a`'s structure. The result is
+    bitwise identical to passing the planned solver explicitly.
+    """
+    if auto:
+        from repro.planner import planned_leaf_solver
+
+        leaf_solver = planned_leaf_solver(a.n, a.block_size, a.dtype)
     b = a.grid
     if b & (b - 1):
         raise ValueError(f"grid must be a power of two, got {b}")
@@ -115,9 +126,34 @@ def spin_inverse(a: BlockMatrix, *, leaf_solver: str = "linalg") -> BlockMatrix:
     return BlockMatrix.arrange(c11, c12, c21, c22)
 
 
-@functools.partial(jax.jit, static_argnames=("block_size", "leaf_solver"))
-def spin_inverse_dense(dense: jax.Array, block_size: int,
-                       leaf_solver: str = "linalg") -> jax.Array:
-    """Convenience: dense (n,n) -> dense (n,n) inverse via SPIN."""
-    a = BlockMatrix.from_dense(dense, block_size)
-    return spin_inverse(a, leaf_solver=leaf_solver).to_dense()
+@functools.partial(jax.jit,
+                   static_argnames=("block_size", "leaf_solver", "engine"))
+def _spin_inverse_dense(dense: jax.Array, block_size: int,
+                        leaf_solver: str = "linalg",
+                        engine: str | None = None) -> jax.Array:
+    # `engine` must be a STATIC argument: the multiply engine is read from a
+    # contextvar at trace time, so without it in the jit key a cached
+    # executable traced under one engine would silently serve another.
+    ctx = multiply_engine(engine) if engine else contextlib.nullcontext()
+    with ctx:
+        a = BlockMatrix.from_dense(dense, block_size)
+        return spin_inverse(a, leaf_solver=leaf_solver).to_dense()
+
+
+def spin_inverse_dense(dense: jax.Array, block_size: int | None = None,
+                       leaf_solver: str = "linalg", *,
+                       engine: str | None = None,
+                       auto: bool = False) -> jax.Array:
+    """Convenience: dense (n,n) -> dense (n,n) inverse via SPIN.
+
+    With auto=True (or block_size=None) the planner picks block size, leaf
+    solver, and multiply engine; the planned execution calls this very
+    function with the chosen static arguments, so `auto=True` is bitwise
+    identical to the explicit call for plans without a refinement stage.
+    engine=None inherits the ambient `multiply_engine` context.
+    """
+    if auto or block_size is None:
+        from repro.planner import plan_inverse
+
+        return plan_inverse(dense)
+    return _spin_inverse_dense(dense, block_size, leaf_solver, engine)

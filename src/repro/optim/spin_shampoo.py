@@ -28,8 +28,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import (solve_grid_for, spin_inverse_batched,
-                        spin_inverse_dense)
+from repro.core import spin_inverse_batched, spin_inverse_dense
 from .adamw import global_norm
 
 __all__ = ["SpinShampooConfig", "spin_shampoo_init", "spin_shampoo_update",
@@ -55,12 +54,19 @@ def invert_spd(mat: jax.Array, damping: float) -> jax.Array:
     the gradient scale, the standard Shampoo/K-FAC choice. Stacked-layer
     factors (L, d, d) go through `spin_inverse_batched` — one compiled SPIN
     program for the whole stack instead of L unrolled copies.
+
+    The block grid comes from the planner's cost-model path (no live
+    measurement — this runs inside `jax.lax.cond` branches at trace time),
+    so each factor dimension lands at the bottom of its §4 U-curve instead
+    of a hand-picked grid.
     """
+    from repro.planner import planned_block_size
+
     n = mat.shape[-1]
     lam = damping * (jnp.trace(mat, axis1=-2, axis2=-1) / n + 1e-12)
     damped = mat + lam[..., None, None] * jnp.eye(n, dtype=mat.dtype)
 
-    bs = n // solve_grid_for(n)
+    bs = planned_block_size(n, jnp.float32)
     damped32 = damped.astype(jnp.float32)
     if mat.ndim == 2:
         return spin_inverse_dense(damped32, bs).astype(mat.dtype)

@@ -1,0 +1,225 @@
+"""Plan scoring and (optional) live refinement for the SPIN autotuner.
+
+Scoring reuses the paper's §4 cost machinery directly:
+
+  * CPU/GPU — `costmodel.spin_cost` (Lemma 4.1 evaluated per level) with
+    calibration constants taken from the plan cache when a previous session
+    has fit them via `costmodel.fit_scale`, else the defaults.
+  * TPU — `costmodel.tpu_roofline_cost` (compute / HBM / ICI terms), with
+    the `ring` engine credited for compute↔collective overlap (max of the
+    terms) and the gather engines charged their sum.
+
+Leaf-solver choice is modeled as a per-backend multiplier on the leafNode
+term (e.g. the Pallas Gauss–Jordan kernel runs in interpret mode on CPU and
+is orders of magnitude slower there; QR pays ~3x the flops of getrf/getri).
+A Newton–Schulz refinement stage is charged its two full-size distributed
+multiplies per sweep.
+
+`autotune` optionally *measures* the top-k model-ranked candidates with a
+short microbenchmark and picks the fastest — the paper's Fig. 4
+theory-vs-practice loop, closed. Measurements along the default
+(linalg/einsum/native-dtype) axis additionally feed `fit_scale`, and the
+calibrated per-class constants are persisted so the *next* problem size is
+predicted well without measuring.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+
+from repro.core.costmodel import (CostParams, fit_scale, spin_cost,
+                                  tpu_roofline_cost)
+
+from .plan import Plan, ProblemSignature
+
+__all__ = ["predict_cost", "rank_plans", "measure_plan", "measure_plans",
+           "autotune", "LEAF_SOLVER_RATE"]
+
+
+# Relative leaf-inversion rates vs LAPACK getrf/getri, per backend. The
+# interpret-mode penalty for the Pallas kernel off-TPU is deliberately huge:
+# it must never be chosen by the model where it runs emulated.
+LEAF_SOLVER_RATE: dict[str, dict[str, float]] = {
+    "linalg": {},                               # 1.0 everywhere
+    "qr": {"default": 3.0},                     # ~3x getri flops
+    "gauss_jordan": {"tpu": 1.2, "default": 200.0},
+}
+
+_DTYPE_BYTES = {"bfloat16": 2, "float16": 2, "float32": 4, "float64": 8}
+
+
+def _leaf_rate(solver: str, backend: str) -> float:
+    rates = LEAF_SOLVER_RATE.get(solver, {})
+    return rates.get(backend, rates.get("default", 1.0))
+
+
+def _cost_params(sig: ProblemSignature, b: int, calibration: dict | None
+                 ) -> CostParams:
+    kw = dict(calibration or {})
+    kw = {k: kw[k] for k in ("t_flop", "t_leaf", "t_block_op", "t_elem")
+          if k in kw}
+    return CostParams(n=sig.n, b=b, cores=sig.cores, **kw)
+
+
+def predict_cost(sig: ProblemSignature, plan: Plan,
+                 calibration: dict | None = None) -> float:
+    """Model seconds for `plan` on `sig`'s problem. Lower is better."""
+    b = plan.grid(sig.n)
+    bytes_ = _DTYPE_BYTES.get(plan.compute_dtype, 4)
+
+    if sig.backend == "tpu":
+        chips = max(sig.device_count, 1)
+        peak = 197e12
+        r = tpu_roofline_cost(sig.n, b, chips, dtype_bytes=bytes_)
+        if plan.multiply_engine == "ring":       # overlapped collective
+            total = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        else:
+            total = r["t_compute"] + r["t_memory"] + r["t_collective"]
+        # Leaf re-pricing: the roofline books leaf flops inside t_compute at
+        # full chips-parallel rate, but the recursion SERIALIZES leaves (the
+        # paper's Eq. 2 — A11 before V) and each runs on one chip. Without
+        # this term b=1 (one whole-matrix serial inversion) would always be
+        # the modeled argmin and auto=True would never recurse on TPU.
+        bs = plan.block_size
+        leaf_flops = b * 2 * bs**3 / 3 * 2
+        t_leaf_parallel = leaf_flops / (chips * peak)   # roofline's credit
+        t_leaf_serial = leaf_flops / peak               # what actually runs
+        total += (t_leaf_serial * _leaf_rate(plan.leaf_solver, "tpu")
+                  - t_leaf_parallel)
+        sweep = 2 * 2 * sig.n**3 / (chips * peak)
+    else:
+        p = _cost_params(sig, b, calibration)
+        c = spin_cost(p)
+        leaf = c["leafNode"]
+        total = (c["total"] - leaf
+                 + leaf * _leaf_rate(plan.leaf_solver, sig.backend))
+        if plan.compute_dtype in ("bfloat16", "float16"):
+            total *= 1.5                         # emulated half-precision
+        # one NS sweep = 2 full-size distributed multiplies (2 n^3 MACs)
+        sweep = 2 * sig.n**3 * p.t_flop / max(1.0, min(b * b, sig.cores))
+    total += plan.refine_sweeps * sweep
+    return float(total)
+
+
+def rank_plans(sig: ProblemSignature, candidates: list[Plan],
+               calibration: dict | None = None) -> list[Plan]:
+    """Candidates sorted by modeled cost, each annotated with its score."""
+    scored = [dataclasses.replace(p, predicted_s=predict_cost(
+        sig, p, calibration)) for p in candidates]
+    return sorted(scored, key=lambda p: p.predicted_s)
+
+
+# ---------------------------------------------------------------------------
+# Live refinement
+# ---------------------------------------------------------------------------
+
+
+def _bench_operands(sig: ProblemSignature):
+    import jax.numpy as jnp
+
+    from repro.core import testing
+
+    dtype = jnp.dtype(sig.dtype)
+    a = testing.make_spd(sig.n, jax.random.PRNGKey(0), dtype=dtype)
+    if sig.kind == "solve":
+        rhs = jax.random.normal(jax.random.PRNGKey(1), (sig.n, 8),
+                                dtype=jnp.float32).astype(dtype)
+        return a, rhs
+    return (a,)
+
+
+def measure_plans(sig: ProblemSignature, plans: list[Plan], *,
+                  warmup: int = 1, iters: int = 5) -> list[float]:
+    """Best-of-`iters` wall seconds for each plan, measured round-robin.
+
+    Min, not median: scheduler noise on loaded hosts is strictly additive,
+    so the fastest observation is the least-contaminated one. Round-robin
+    (all candidates once per round, `iters` rounds) rather than
+    per-candidate batches, so a slow system phase penalizes every candidate
+    equally instead of whichever one it happened to land on.
+    """
+    from . import dispatch  # late: dispatch imports this module
+
+    operands = _bench_operands(sig)
+    run = (dispatch.execute_solve if sig.kind == "solve"
+           else dispatch.execute_inverse)
+    for plan in plans:                       # compile + warm every plan first
+        for _ in range(warmup):
+            jax.block_until_ready(run(plan, *operands))
+    best = [float("inf")] * len(plans)
+    for _ in range(iters):
+        for i, plan in enumerate(plans):
+            t0 = time.perf_counter()
+            jax.block_until_ready(run(plan, *operands))
+            best[i] = min(best[i], time.perf_counter() - t0)
+    return best
+
+
+def measure_plan(sig: ProblemSignature, plan: Plan, *, warmup: int = 1,
+                 iters: int = 5) -> float:
+    """Best-of-`iters` wall seconds of one planned execution."""
+    return measure_plans(sig, [plan], warmup=warmup, iters=iters)[0]
+
+
+def _calibration_points(measured: list[Plan], sig: ProblemSignature
+                        ) -> dict[int, float]:
+    """{b: seconds} along the default axis (linalg / einsum / native dtype)."""
+    pts = {}
+    for p in measured:
+        if (p.leaf_solver == "linalg" and p.multiply_engine == "einsum"
+                and p.compute_dtype == sig.dtype and p.refine_sweeps == 0
+                and p.measured_s is not None):
+            pts[p.grid(sig.n)] = p.measured_s
+    return pts
+
+
+def autotune(sig: ProblemSignature, candidates: list[Plan], *,
+             measure: bool = False, top_k: int | None = 4,
+             calibration: dict | None = None
+             ) -> tuple[Plan, dict | None]:
+    """Choose a plan; returns (plan, new_calibration_or_None).
+
+    measure=False: pure cost-model argmin (safe at trace time — no jax
+    computation is issued). measure=True: microbenchmark the `top_k`
+    model-ranked candidates (all of them when top_k is None) and take the
+    measured argmin; calibration constants are refit when at least three
+    grids were measured along the default axis.
+    """
+    ranked = rank_plans(sig, candidates, calibration)
+    if not measure:
+        return ranked[0], None
+
+    short = ranked if top_k is None else ranked[:max(top_k, 1)]
+    # Outside a mesh context the SUMMA engines fall back to einsum, so
+    # engine-only variants execute the SAME program — measuring them
+    # separately would let timer noise pick the engine. Measure one
+    # representative per behavioral group (the best-ranked one, so ties
+    # resolve to the model's preference) and share its time.
+    from repro import compat
+
+    mesh = compat.get_abstract_mesh()
+    mesh_active = bool(mesh is not None and getattr(mesh, "shape", None))
+
+    def behavior(p: Plan) -> tuple:
+        key = (p.block_size, p.leaf_solver, p.compute_dtype, p.refine_sweeps)
+        return key + ((p.multiply_engine,) if mesh_active else ())
+
+    reps: dict[tuple, Plan] = {}
+    for p in short:
+        reps.setdefault(behavior(p), p)
+    uniq = list(reps.values())
+    secs = dict(zip(map(behavior, uniq), measure_plans(sig, uniq)))
+    timed = [dataclasses.replace(p, measured_s=secs[behavior(p)],
+                                 source="measured") for p in short]
+    best = min(timed, key=lambda p: p.measured_s)   # ties -> ranked order
+
+    new_calib = None
+    pts = _calibration_points(timed, sig)
+    if sig.backend != "tpu" and len(pts) >= 3:
+        fit = fit_scale(spin_cost, pts, n=sig.n, cores=sig.cores)
+        new_calib = {"t_flop": fit.t_flop, "t_leaf": fit.t_leaf,
+                     "t_block_op": fit.t_block_op, "t_elem": fit.t_elem}
+    return best, new_calib

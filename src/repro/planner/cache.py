@@ -1,0 +1,148 @@
+"""Persistent JSON plan cache for the SPIN autotuner.
+
+One JSON file holds (a) chosen plans keyed by problem-signature key and
+(b) per-(backend, cores, dtype) cost-model calibration constants fit by
+`costmodel.fit_scale`. The file is shared across processes: a planner run
+in one process (or a previous session) is reused by the next, which is what
+makes `auto=True` cheap after first use.
+
+Invalidation rules (DESIGN.md §Planner):
+  * `version` mismatch discards the whole file (format evolution);
+  * the signature key embeds kind/n/dtype/backend/device_count/cores, so a
+    topology or dtype change never reuses a stale plan — it simply misses;
+  * each entry stores the full signature dict and is re-verified on read
+    (guards against key-scheme drift);
+  * a cost-model-only entry ("costmodel" source) is upgraded in place the
+    first time the same problem is planned with measurement enabled.
+
+Writes are atomic (tmp file + os.replace) and best-effort: a read-only
+cache directory degrades to in-memory-only planning, never an error.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+
+from .plan import Plan, ProblemSignature
+
+__all__ = ["PlanCache", "default_cache", "default_cache_path",
+           "PLAN_CACHE_VERSION"]
+
+PLAN_CACHE_VERSION = 1
+
+_ENV_VAR = "SPIN_PLAN_CACHE"
+
+
+def default_cache_path() -> str:
+    env = os.environ.get(_ENV_VAR)
+    if env:
+        return env
+    base = os.environ.get("XDG_CACHE_HOME",
+                          os.path.join(os.path.expanduser("~"), ".cache"))
+    return os.path.join(base, "repro_spin", "plans.json")
+
+
+class PlanCache:
+    """Load-on-first-use, save-on-put JSON store of plans + calibrations."""
+
+    def __init__(self, path: str | None = None):
+        self.path = path or default_cache_path()
+        self._lock = threading.Lock()
+        self._data: dict | None = None
+
+    # -- persistence --------------------------------------------------------
+    def _load(self) -> dict:
+        if self._data is not None:
+            return self._data
+        data = {"version": PLAN_CACHE_VERSION, "plans": {}, "calibration": {}}
+        try:
+            with open(self.path) as f:
+                raw = json.load(f)
+            if raw.get("version") == PLAN_CACHE_VERSION:
+                data["plans"] = dict(raw.get("plans", {}))
+                data["calibration"] = dict(raw.get("calibration", {}))
+        except (OSError, ValueError):
+            pass                      # missing or corrupt -> start empty
+        self._data = data
+        return data
+
+    def _save(self, merge: bool = True) -> None:
+        assert self._data is not None
+        # Merge-on-save: another process may have added entries since our
+        # load; re-read and overlay our entries so a write never deletes a
+        # concurrent writer's plans (last writer wins only per key).
+        merged = {"version": PLAN_CACHE_VERSION, "plans": {},
+                  "calibration": {}}
+        if merge:
+            try:
+                with open(self.path) as f:
+                    raw = json.load(f)
+                if raw.get("version") == PLAN_CACHE_VERSION:
+                    merged["plans"].update(raw.get("plans", {}))
+                    merged["calibration"].update(raw.get("calibration", {}))
+            except (OSError, ValueError):
+                pass
+        merged["plans"].update(self._data["plans"])
+        merged["calibration"].update(self._data["calibration"])
+        self._data = merged
+        try:
+            os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+            fd, tmp = tempfile.mkstemp(
+                dir=os.path.dirname(self.path) or ".", suffix=".tmp")
+            with os.fdopen(fd, "w") as f:
+                json.dump(merged, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except OSError:
+            pass                      # read-only FS -> in-memory only
+
+    # -- plans ---------------------------------------------------------------
+    def get(self, sig: ProblemSignature) -> Plan | None:
+        with self._lock:
+            entry = self._load()["plans"].get(sig.key())
+            if not entry or entry.get("sig") != sig.as_dict():
+                return None
+            return Plan.from_dict(entry["plan"])
+
+    def put(self, sig: ProblemSignature, plan: Plan) -> None:
+        with self._lock:
+            data = self._load()
+            data["plans"][sig.key()] = {"sig": sig.as_dict(),
+                                        "plan": plan.to_dict()}
+            self._save()
+
+    # -- calibration ---------------------------------------------------------
+    @staticmethod
+    def calibration_key(sig: ProblemSignature) -> str:
+        return f"{sig.backend}/c{sig.cores}/{sig.dtype}"
+
+    def get_calibration(self, sig: ProblemSignature) -> dict | None:
+        with self._lock:
+            return self._load()["calibration"].get(self.calibration_key(sig))
+
+    def put_calibration(self, sig: ProblemSignature, constants: dict) -> None:
+        with self._lock:
+            data = self._load()
+            data["calibration"][self.calibration_key(sig)] = dict(constants)
+            self._save()
+
+    def clear(self) -> None:
+        with self._lock:
+            self._data = {"version": PLAN_CACHE_VERSION, "plans": {},
+                          "calibration": {}}
+            self._save(merge=False)
+
+
+_DEFAULT: PlanCache | None = None
+_DEFAULT_LOCK = threading.Lock()
+
+
+def default_cache() -> PlanCache:
+    """Process-wide cache at `default_cache_path()` (env-overridable)."""
+    global _DEFAULT
+    with _DEFAULT_LOCK:
+        if _DEFAULT is None or _DEFAULT.path != default_cache_path():
+            _DEFAULT = PlanCache()
+        return _DEFAULT

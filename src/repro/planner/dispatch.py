@@ -1,0 +1,203 @@
+"""Planned execution: `plan_inverse` / `plan_solve` and the `auto=True` path.
+
+`get_plan` is the policy pipeline: cache lookup → candidate enumeration
+(`plan.enumerate_plans`) → cost-model ranking, optionally refined by live
+microbenchmarks (`autotune.autotune`) → cache write-back. `execute_inverse`
+/ `execute_solve` are the mechanism: run one concrete plan, including the
+Newton–Schulz low-precision refinement stage when the plan selects it.
+
+Trace-time safety: `planned_block_size` (the hook `optim/spin_shampoo.py`
+uses inside `jax.lax.cond` branches) never measures and memoizes per
+process, so consulting the planner while JAX is tracing costs a dict lookup
+and issues no computation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blockmatrix import BlockMatrix
+from repro.core.multiply import multiply_engine
+from repro.core.newton_schulz import newton_schulz_polish
+
+from .autotune import autotune as _autotune_plans
+from .cache import PlanCache, default_cache
+from .plan import Plan, enumerate_plans, signature_for
+
+__all__ = ["get_plan", "plan_inverse", "plan_solve", "planned_block_size",
+           "planned_leaf_solver", "execute_inverse", "execute_solve",
+           "MEASURE_MAX_N"]
+
+# `measure="auto"` microbenchmarks only problems at or below this size; above
+# it the cost model (calibrated, when a previous tune ran) decides alone, so
+# a first planned 2^17 inversion never pays a sweep of giant warmup runs.
+MEASURE_MAX_N = 512
+
+
+def _resolve_measure(measure, n: int) -> bool:
+    if measure == "auto":
+        return n <= MEASURE_MAX_N
+    return bool(measure)
+
+
+def get_plan(kind: str, n: int, dtype=jnp.float32, *,
+             measure: bool | str = "auto",
+             top_k: int | None = 4,
+             cache: PlanCache | None = None,
+             force_replan: bool = False,
+             **enumerate_kw) -> Plan:
+    """Select (or recall) the plan for one (kind, n, dtype) problem.
+
+    measure: True / False / "auto" (measure iff n <= MEASURE_MAX_N).
+    A cached cost-model-only plan is upgraded the first time the same
+    problem is planned with measurement enabled.
+    """
+    if kind not in ("inverse", "solve"):
+        raise ValueError(f"unknown plan kind {kind!r}")
+    sig = signature_for(kind, n, dtype,
+                        constraint=_constraint_key(enumerate_kw))
+    cache = cache or default_cache()
+    do_measure = _resolve_measure(measure, n)
+
+    cached = cache.get(sig)
+    if cached is not None and not force_replan:
+        if not (do_measure and cached.source == "costmodel"):
+            return cached
+
+    candidates = enumerate_plans(sig, **enumerate_kw)
+    if not candidates:
+        raise ValueError(f"no feasible plans for {sig.key()} "
+                         f"(constraints: {enumerate_kw})")
+    plan, calib = _autotune_plans(
+        sig, candidates, measure=do_measure, top_k=top_k,
+        calibration=cache.get_calibration(sig))
+    cache.put(sig, plan)
+    if calib:
+        cache.put_calibration(sig, calib)
+    return plan
+
+
+def _constraint_key(enumerate_kw: dict) -> str:
+    """Cache-key suffix for constrained enumerations.
+
+    EVERY non-default enumeration knob must appear here: a plan chosen from
+    a restricted candidate space cached under the unconstrained key would
+    poison every later unconstrained `auto=True` lookup.
+    """
+    if not enumerate_kw:
+        return ""
+    parts = []
+    for k in sorted(enumerate_kw):
+        v = enumerate_kw[k]
+        if isinstance(v, (tuple, list)):
+            v = "+".join(str(x) for x in v)
+        parts.append(f"{k}={v}")
+    return ";".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# Executing a plan
+# ---------------------------------------------------------------------------
+
+
+def _refined_inverse(plan: Plan, dense: jax.Array) -> jax.Array:
+    """Low-precision recursion + Newton–Schulz polish back to full precision."""
+    from repro.core.spin import spin_inverse_dense
+
+    approx = spin_inverse_dense(
+        dense.astype(plan.compute_dtype), plan.block_size, plan.leaf_solver,
+        engine=plan.multiply_engine).astype(dense.dtype)
+    a = BlockMatrix.from_dense(dense, plan.block_size)
+    x0 = BlockMatrix.from_dense(approx, plan.block_size)
+    with multiply_engine(plan.multiply_engine):   # eager polish multiplies
+        return newton_schulz_polish(a, x0,
+                                    sweeps=plan.refine_sweeps).to_dense()
+
+
+def execute_inverse(plan: Plan, dense: jax.Array) -> jax.Array:
+    """Run one concrete inversion plan on a dense (n, n) matrix.
+
+    The engine travels as a STATIC jit argument (not just the contextvar):
+    the engine is resolved at trace time, so it must be part of the jit
+    cache key for two plans differing only in engine to run different code.
+    """
+    from repro.core.spin import spin_inverse_dense
+
+    if plan.compute_dtype != dense.dtype.name and plan.refine_sweeps:
+        return _refined_inverse(plan, dense)
+    return spin_inverse_dense(dense, plan.block_size, plan.leaf_solver,
+                              engine=plan.multiply_engine)
+
+
+def execute_solve(plan: Plan, dense: jax.Array, rhs: jax.Array) -> jax.Array:
+    """Run one concrete solve plan on dense A (n, n) and RHS B (n, k)|(n,)."""
+    from repro.core.solve import spin_solve_dense
+
+    return spin_solve_dense(dense, rhs, plan.block_size, plan.leaf_solver,
+                            engine=plan.multiply_engine)
+
+
+# ---------------------------------------------------------------------------
+# Public planned entry points
+# ---------------------------------------------------------------------------
+
+
+def plan_inverse(dense: jax.Array, *, plan: Plan | None = None,
+                 measure: bool | str = "auto",
+                 cache: PlanCache | None = None,
+                 return_plan: bool = False, **plan_kw):
+    """Invert a dense SPD matrix with an autotuned plan.
+
+    Equivalent to `spin_inverse_dense(dense, p.block_size, p.leaf_solver)`
+    under `p`'s multiply engine — bitwise, when `p` has no refinement stage.
+    """
+    if plan is None:
+        plan = get_plan("inverse", dense.shape[0], dense.dtype,
+                        measure=measure, cache=cache, **plan_kw)
+    out = execute_inverse(plan, dense)
+    return (out, plan) if return_plan else out
+
+
+def plan_solve(dense: jax.Array, rhs: jax.Array, *, plan: Plan | None = None,
+               measure: bool | str = "auto",
+               cache: PlanCache | None = None,
+               return_plan: bool = False, **plan_kw):
+    """Solve A X = B with an autotuned plan (inverse-free SPIN recursion)."""
+    if plan is None:
+        plan = get_plan("solve", dense.shape[0], dense.dtype,
+                        measure=measure, cache=cache, **plan_kw)
+    out = execute_solve(plan, dense, rhs)
+    return (out, plan) if return_plan else out
+
+
+@functools.lru_cache(maxsize=256)
+def _planned_fields(kind: str, n: int, dtype_name: str,
+                    block_sizes: tuple[int, ...] | None,
+                    cache_path: str) -> tuple[int, str]:
+    # cache_path is part of the memo key so a changed $SPIN_PLAN_CACHE (e.g.
+    # a test pointing at a tmpdir) is observed instead of serving answers
+    # memoized against the previous cache file.
+    kw = {"block_sizes": block_sizes} if block_sizes else {}
+    plan = get_plan(kind, n, jnp.dtype(dtype_name), measure=False, **kw)
+    return plan.block_size, plan.leaf_solver
+
+
+def planned_block_size(n: int, dtype=jnp.float32, kind: str = "inverse"
+                       ) -> int:
+    """Cost-model-only block size for (kind, n, dtype) — trace-time safe."""
+    from .cache import default_cache_path
+
+    return _planned_fields(kind, int(n), jnp.dtype(dtype).name, None,
+                           default_cache_path())[0]
+
+
+def planned_leaf_solver(n: int, block_size: int, dtype=jnp.float32,
+                        kind: str = "inverse") -> str:
+    """Leaf solver for a problem whose block grid is already fixed."""
+    from .cache import default_cache_path
+
+    return _planned_fields(kind, int(n), jnp.dtype(dtype).name,
+                           (int(block_size),), default_cache_path())[1]

@@ -1,0 +1,165 @@
+"""Plan and problem-signature types for the SPIN autotuner.
+
+A *plan* is everything `spin_inverse`/`spin_solve` need beyond the operands:
+the block grid (the paper's `b`, stored as `block_size = n/b`), the leaf
+solver, the distributed-multiply engine, the compute dtype, an optional
+Newton–Schulz refinement stage, and the grid-over-mesh sharding axes. A
+*problem signature* is the key the plan is selected (and cached) under:
+(kind, n, dtype, backend, device_count, cores) — everything the U-curve of
+paper Fig. 3 depends on. Plans are plain frozen dataclasses so they
+round-trip losslessly through the JSON plan cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Plan", "ProblemSignature", "signature_for", "enumerate_plans",
+           "candidate_grids"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ProblemSignature:
+    """Everything plan selection may depend on. `key()` is the cache key."""
+
+    kind: str            # "inverse" | "solve"
+    n: int               # matrix dimension
+    dtype: str           # canonical dtype name ("float32", "bfloat16", ...)
+    backend: str         # jax.default_backend(): "cpu" | "gpu" | "tpu"
+    device_count: int    # devices in the mesh (paper's worker count)
+    cores: int           # parallel lanes for the §4 cost model's PF terms
+    constraint: str = ""  # e.g. "bs64" when the block grid is pre-fixed
+
+    def key(self) -> str:
+        base = (f"{self.kind}/n{self.n}/{self.dtype}/{self.backend}"
+                f"/d{self.device_count}/c{self.cores}")
+        return f"{base}/{self.constraint}" if self.constraint else base
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def signature_for(kind: str, n: int, dtype=jnp.float32, *,
+                  backend: str | None = None,
+                  device_count: int | None = None,
+                  cores: int | None = None,
+                  constraint: str = "") -> ProblemSignature:
+    """Build the signature for the *current* runtime.
+
+    `cores` feeds the cost model's parallelization-factor terms: on CPU the
+    XLA thread pool parallelizes block GEMMs across host cores even with one
+    "device", so it defaults to os.cpu_count(); on accelerators it is the
+    device count (the paper's `cores` = Spark executors).
+    """
+    backend = backend or jax.default_backend()
+    device_count = device_count or jax.device_count()
+    if cores is None:
+        cores = (max(os.cpu_count() or 1, device_count)
+                 if backend == "cpu" else device_count)
+    return ProblemSignature(kind=kind, n=int(n), dtype=jnp.dtype(dtype).name,
+                            backend=backend, device_count=int(device_count),
+                            cores=int(cores), constraint=constraint)
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """One executable configuration of the SPIN recursion."""
+
+    block_size: int              # paper's n/b; grid b = n // block_size
+    leaf_solver: str = "linalg"
+    multiply_engine: str = "einsum"   # "einsum" | "allgather" | "ring"
+    compute_dtype: str = "float32"    # dtype the recursion runs in
+    refine_sweeps: int = 0            # Newton–Schulz polish sweeps afterwards
+    grid_axes: tuple[str, str] = ("data", "model")
+    # provenance — not part of plan identity for execution purposes
+    predicted_s: float | None = None  # cost-model score (seconds)
+    measured_s: float | None = None   # microbenchmark wall-clock (seconds)
+    source: str = "costmodel"         # "costmodel" | "measured" | "cache"
+
+    def grid(self, n: int) -> int:
+        return n // self.block_size
+
+    def execution_key(self) -> tuple:
+        """Identity of *what runs* (provenance fields excluded)."""
+        return (self.block_size, self.leaf_solver, self.multiply_engine,
+                self.compute_dtype, self.refine_sweeps, self.grid_axes)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["grid_axes"] = list(self.grid_axes)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Plan":
+        known = {f.name for f in dataclasses.fields(cls)}
+        kw = {k: v for k, v in d.items() if k in known}
+        kw["grid_axes"] = tuple(kw.get("grid_axes", ("data", "model")))
+        return cls(**kw)
+
+
+def candidate_grids(n: int, *, min_block: int = 8, max_grid: int = 64
+                    ) -> list[int]:
+    """Power-of-two grids b with n % b == 0 and n/b >= min_block.
+
+    b=1 (single-leaf direct inversion) is always a candidate — it is the
+    left endpoint of the paper's U-curve and the right answer for small n.
+    """
+    grids, b = [], 1
+    while b <= max_grid and n % b == 0 and n // b >= min_block:
+        grids.append(b)
+        b *= 2
+    return grids or [1]
+
+
+def enumerate_plans(sig: ProblemSignature, *,
+                    min_block: int = 8,
+                    max_grid: int = 64,
+                    leaf_solvers: tuple[str, ...] | None = None,
+                    engines: tuple[str, ...] | None = None,
+                    include_refinement: bool | None = None,
+                    block_sizes: tuple[int, ...] | None = None
+                    ) -> list[Plan]:
+    """The raw candidate space for `sig` (unscored, deduplicated).
+
+    Refinement variants (bfloat16 recursion + Newton–Schulz polish back to
+    the requested precision) are only enumerated for `kind="inverse"` —
+    Newton–Schulz polishes an inverse, not a solve, and `execute_solve`
+    would silently ignore the stage — and only where bf16 is a hardware
+    dtype (TPU) with float32 results requested; on CPU bf16 is emulated and
+    never wins.
+    """
+    from repro.core.spin import LEAF_SOLVERS  # late: avoid import cycle
+
+    if leaf_solvers is None:
+        leaf_solvers = tuple(LEAF_SOLVERS)
+    if engines is None:
+        engines = (("einsum", "allgather", "ring")
+                   if sig.device_count > 1 else ("einsum",))
+    if include_refinement is None:
+        include_refinement = sig.backend == "tpu" and sig.dtype == "float32"
+    include_refinement = include_refinement and sig.kind == "inverse"
+
+    if block_sizes is not None:
+        grids = sorted({sig.n // bs for bs in block_sizes if sig.n % bs == 0})
+    else:
+        grids = candidate_grids(sig.n, min_block=min_block, max_grid=max_grid)
+
+    plans: list[Plan] = []
+    for b in grids:
+        bs = sig.n // b
+        # b == 1 has no distributed multiplies — engine is irrelevant.
+        for engine in (engines if b > 1 else engines[:1]):
+            for leaf in leaf_solvers:
+                plans.append(Plan(block_size=bs, leaf_solver=leaf,
+                                  multiply_engine=engine,
+                                  compute_dtype=sig.dtype))
+                if include_refinement and b > 1:
+                    plans.append(Plan(block_size=bs, leaf_solver=leaf,
+                                      multiply_engine=engine,
+                                      compute_dtype="bfloat16",
+                                      refine_sweeps=2))
+    return plans

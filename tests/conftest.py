@@ -81,3 +81,17 @@ except ImportError:
     _hyp.__is_repro_stub__ = True
     sys.modules["hypothesis"] = _hyp
     sys.modules["hypothesis.strategies"] = _st
+
+
+# ---------------------------------------------------------------------------
+# Hermetic plan cache: tests must neither read a developer's persistent
+# ~/.cache/repro_spin/plans.json (stale plans would change planner-dependent
+# test outcomes) nor write to it. Respect an explicit override.
+# ---------------------------------------------------------------------------
+
+import os
+import tempfile
+
+if "SPIN_PLAN_CACHE" not in os.environ:
+    os.environ["SPIN_PLAN_CACHE"] = os.path.join(
+        tempfile.mkdtemp(prefix="spin_plan_cache_"), "plans.json")

@@ -1,0 +1,310 @@
+"""Planner subsystem tests: enumeration, cost-model shape, plan cache
+persistence, auto=True equivalence, and the within-25%-of-exhaustive
+acceptance bound (ISSUE 2)."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import spin_inverse_dense, spin_solve_dense
+from repro.core.testing import make_spd
+from repro.planner import (Plan, PlanCache, candidate_grids, enumerate_plans,
+                           execute_inverse, get_plan, measure_plans,
+                           plan_inverse, plan_solve, planned_block_size,
+                           predict_cost, rank_plans, signature_for)
+
+
+# ----------------------------------------------------------- enumeration
+
+def test_candidate_grids_power_of_two_and_divisible():
+    assert candidate_grids(256) == [1, 2, 4, 8, 16, 32]
+    assert candidate_grids(50) == [1, 2]          # 4 does not divide 50
+    assert candidate_grids(8) == [1]              # blocks must stay >= 8
+    assert candidate_grids(1 << 14, max_grid=64)[-1] == 64
+
+
+def test_enumerate_plans_single_device_has_no_summa_engines():
+    sig = signature_for("inverse", 256, jnp.float32, device_count=1)
+    engines = {p.multiply_engine for p in enumerate_plans(sig)}
+    assert engines == {"einsum"}
+
+
+def test_enumerate_plans_multi_device_and_refinement():
+    sig = signature_for("inverse", 256, jnp.float32, backend="tpu",
+                        device_count=4, cores=4)
+    plans = enumerate_plans(sig)
+    assert {p.multiply_engine for p in plans} == {"einsum", "allgather",
+                                                 "ring"}
+    refined = [p for p in plans if p.refine_sweeps]
+    assert refined and all(p.compute_dtype == "bfloat16" for p in refined)
+    # refinement is an explicit opt-in elsewhere
+    cpu_sig = signature_for("inverse", 256, jnp.float32, backend="cpu",
+                            device_count=1, cores=8)
+    assert not any(p.refine_sweeps for p in enumerate_plans(cpu_sig))
+
+
+def test_enumerate_plans_fixed_block_size():
+    sig = signature_for("inverse", 256, jnp.float32)
+    plans = enumerate_plans(sig, block_sizes=(64,))
+    assert plans and all(p.block_size == 64 for p in plans)
+
+
+# ----------------------------------------------------------- cost model
+
+def test_cost_model_u_curve_interior_beats_endpoints():
+    """For large n both U-curve endpoints (b=1, b=n/8) must lose to some
+    interior grid — the paper's central Fig. 3 shape, as scored by the
+    planner."""
+    n = 1 << 14
+    sig = signature_for("inverse", n, jnp.float32, backend="cpu",
+                        device_count=1, cores=8)
+    cost = {b: predict_cost(sig, Plan(block_size=n // b))
+            for b in [2 ** k for k in range(0, 12)]}   # b = 1 .. n/8
+    interior = min(cost[b] for b in cost if 1 < b < n // 8)
+    assert interior < cost[1], "b=1 endpoint should be beatable"
+    assert interior < cost[n // 8], "b=n/8 endpoint should be beatable"
+
+
+def test_rank_plans_penalizes_interpreted_gauss_jordan_on_cpu():
+    sig = signature_for("inverse", 256, jnp.float32, backend="cpu",
+                        device_count=1, cores=8)
+    ranked = rank_plans(sig, enumerate_plans(sig))
+    assert ranked[0].leaf_solver != "gauss_jordan"
+    worst = [p.leaf_solver for p in ranked[-3:]]
+    assert "gauss_jordan" in worst
+
+
+def test_tpu_ranking_recurses_instead_of_single_leaf():
+    """Regression: the roofline credits all flops with chips-parallelism,
+    but leaf inversions serialize on one chip — without re-pricing them,
+    b=1 (one whole-matrix serial inversion) ranks first at every n and
+    auto=True never recurses on TPU."""
+    for n in (1 << 13, 1 << 15):
+        sig = signature_for("inverse", n, jnp.float32, backend="tpu",
+                            device_count=256, cores=256)
+        best = rank_plans(sig, enumerate_plans(sig, max_grid=256))[0]
+        assert best.grid(n) > 1, f"n={n} planned a single serial leaf"
+
+
+def test_solve_plans_never_enumerate_refinement():
+    """Newton-Schulz polishes an inverse; execute_solve has no refinement
+    stage, so enumerating refined solve plans would cache plans describing
+    an execution that never happens."""
+    sig = signature_for("solve", 4096, jnp.float32, backend="tpu",
+                        device_count=256, cores=256)
+    assert not any(p.refine_sweeps for p in
+                   enumerate_plans(sig, include_refinement=True))
+
+
+def test_predict_cost_tpu_ring_overlap_wins_at_scale():
+    sig = signature_for("inverse", 1 << 15, jnp.float32, backend="tpu",
+                        device_count=256, cores=256)
+    ring = predict_cost(sig, Plan(block_size=(1 << 15) // 16,
+                                  multiply_engine="ring"))
+    gather = predict_cost(sig, Plan(block_size=(1 << 15) // 16,
+                                    multiply_engine="allgather"))
+    assert ring <= gather
+
+
+# ----------------------------------------------------------- plan cache
+
+def test_plan_cache_round_trip(tmp_path):
+    cache = PlanCache(str(tmp_path / "plans.json"))
+    sig = signature_for("inverse", 128, jnp.float32)
+    plan = Plan(block_size=32, leaf_solver="linalg", predicted_s=1e-3,
+                measured_s=2e-3, source="measured")
+    cache.put(sig, plan)
+
+    reloaded = PlanCache(str(tmp_path / "plans.json"))   # "new process"
+    got = reloaded.get(sig)
+    assert got == plan                                   # field-for-field
+    assert got.execution_key() == plan.execution_key()
+
+
+def test_plan_cache_survives_process_restart(tmp_path):
+    """End-to-end: plan with measurement, then re-plan from a fresh cache
+    object on the same file — the second call must hit, not re-measure."""
+    path = str(tmp_path / "plans.json")
+    plan1 = get_plan("inverse", 64, jnp.float32, measure=True,
+                     top_k=None, cache=PlanCache(path),
+                     leaf_solvers=("linalg",))
+    assert plan1.source == "measured"
+
+    calls = []
+    import repro.planner.autotune as at
+    orig = at.measure_plans
+    at.measure_plans = lambda *a, **k: calls.append(1) or orig(*a, **k)
+    try:
+        plan2 = get_plan("inverse", 64, jnp.float32, measure=True,
+                         top_k=None, cache=PlanCache(path),
+                         leaf_solvers=("linalg",))
+    finally:
+        at.measure_plans = orig
+    assert not calls, "cache hit must not re-measure"
+    assert plan2.execution_key() == plan1.execution_key()
+
+
+def test_plan_cache_version_mismatch_invalidates(tmp_path):
+    path = tmp_path / "plans.json"
+    sig = signature_for("inverse", 128, jnp.float32)
+    cache = PlanCache(str(path))
+    cache.put(sig, Plan(block_size=32))
+    raw = json.loads(path.read_text())
+    raw["version"] = -1
+    path.write_text(json.dumps(raw))
+    assert PlanCache(str(path)).get(sig) is None
+
+
+def test_plan_cache_signature_mismatch_misses(tmp_path):
+    cache = PlanCache(str(tmp_path / "plans.json"))
+    sig = signature_for("inverse", 128, jnp.float32)
+    cache.put(sig, Plan(block_size=32))
+    other = signature_for("inverse", 128, jnp.bfloat16)
+    assert cache.get(other) is None
+
+
+def test_plan_cache_corrupt_file_degrades_to_empty(tmp_path):
+    path = tmp_path / "plans.json"
+    path.write_text("{not json")
+    cache = PlanCache(str(path))
+    sig = signature_for("inverse", 128, jnp.float32)
+    assert cache.get(sig) is None
+    cache.put(sig, Plan(block_size=64))       # and it can still write
+    assert PlanCache(str(path)).get(sig).block_size == 64
+
+
+def test_plan_cache_concurrent_writers_merge(tmp_path):
+    """A put() must not clobber entries another process wrote after our
+    load: writes merge per key instead of dumping the stale snapshot."""
+    path = str(tmp_path / "plans.json")
+    sig_a = signature_for("inverse", 64, jnp.float32)
+    sig_b = signature_for("inverse", 1024, jnp.float32)
+    a, b = PlanCache(path), PlanCache(path)
+    a.get(sig_a)                       # force both snapshots to load now
+    b.get(sig_b)
+    b.put(sig_b, Plan(block_size=128))
+    a.put(sig_a, Plan(block_size=16))  # a's snapshot predates b's write
+    fresh = PlanCache(path)
+    assert fresh.get(sig_a).block_size == 16
+    assert fresh.get(sig_b).block_size == 128
+
+
+def test_costmodel_plan_upgraded_by_measurement(tmp_path):
+    path = str(tmp_path / "plans.json")
+    p1 = get_plan("inverse", 64, jnp.float32, measure=False,
+                  cache=PlanCache(path))
+    assert p1.source == "costmodel"
+    p2 = get_plan("inverse", 64, jnp.float32, measure=True, top_k=2,
+                  cache=PlanCache(path))
+    assert p2.source == "measured" and p2.measured_s is not None
+
+
+# ----------------------------------------------------------- auto path
+
+def test_auto_inverse_bitwise_matches_explicit_plan(tmp_path):
+    a = make_spd(128, jax.random.PRNGKey(0))
+    cache = PlanCache(str(tmp_path / "plans.json"))
+    x_auto, plan = plan_inverse(a, cache=cache, return_plan=True)
+    x_explicit = spin_inverse_dense(a, plan.block_size, plan.leaf_solver)
+    assert jnp.array_equal(x_auto, x_explicit)
+    # and the spin_inverse_dense(auto=True) spelling agrees with the same
+    # plan re-executed from the cache
+    x_again = execute_inverse(plan, a)
+    assert jnp.array_equal(x_auto, x_again)
+
+
+def test_auto_solve_bitwise_matches_explicit_plan(tmp_path):
+    a = make_spd(128, jax.random.PRNGKey(1))
+    b = jax.random.normal(jax.random.PRNGKey(2), (128, 4))
+    cache = PlanCache(str(tmp_path / "plans.json"))
+    x_auto, plan = plan_solve(a, b, cache=cache, return_plan=True)
+    x_explicit = spin_solve_dense(a, b, plan.block_size, plan.leaf_solver)
+    assert jnp.array_equal(x_auto, x_explicit)
+
+
+def test_planned_block_size_is_trace_safe():
+    """The shampoo hook must be consultable while JAX is tracing."""
+    @jax.jit
+    def f(x):
+        bs = planned_block_size(x.shape[0], x.dtype)
+        return spin_inverse_dense(x, bs)
+
+    a = make_spd(64, jax.random.PRNGKey(3))
+    inv = f(a)
+    resid = jnp.linalg.norm(inv @ a - jnp.eye(64)) / 8.0
+    assert float(resid) < 1e-3
+
+
+def test_planned_block_size_divides_n_and_grid_is_pow2():
+    for n in (50, 64, 96, 256, 6144):
+        bs = planned_block_size(n)
+        assert n % bs == 0
+        g = n // bs
+        assert g & (g - 1) == 0
+
+
+def test_multiply_engine_is_a_static_jit_argument():
+    """Two plans differing only in multiply engine must not share a compiled
+    executable: the engine is resolved at trace time, so a changed engine
+    has to retrace. Op counts only bump during tracing, which makes the
+    retrace observable."""
+    from repro.core import count_ops
+
+    a = make_spd(64, jax.random.PRNGKey(7))
+    spin_inverse_dense(a, 16, engine="einsum")          # compile once
+    with count_ops() as cached:
+        spin_inverse_dense(a, 16, engine="einsum")      # cache hit: no trace
+    assert cached.multiplies == 0
+    with count_ops() as retraced:
+        x_ring = spin_inverse_dense(a, 16, engine="ring")
+    assert retraced.multiplies > 0, "changed engine must retrace"
+    # single-device: SUMMA engines fall back to einsum, results agree
+    assert jnp.allclose(x_ring, spin_inverse_dense(a, 16, engine="einsum"))
+
+
+# ------------------------------------------- newton-schulz refinement stage
+
+def test_refined_plan_executes_and_polishes():
+    """A plan selecting the bf16 + Newton–Schulz refinement stage must beat
+    the unrefined bf16 recursion's accuracy at f32 output."""
+    a = make_spd(64, jax.random.PRNGKey(4))
+    raw = spin_inverse_dense(a.astype(jnp.bfloat16), 16).astype(jnp.float32)
+    plan = Plan(block_size=16, compute_dtype="bfloat16", refine_sweeps=2)
+    polished = execute_inverse(plan, a)
+    eye = jnp.eye(64)
+    r_raw = float(jnp.linalg.norm(raw @ a - eye))
+    r_pol = float(jnp.linalg.norm(polished @ a - eye))
+    assert polished.dtype == a.dtype
+    assert r_pol < r_raw * 0.1
+
+
+# ------------------------------------------- acceptance: within 25% of best
+
+@pytest.mark.parametrize("n", [64, 128, 256])
+def test_planner_within_25pct_of_exhaustive_sweep(tmp_path, n):
+    """ISSUE 2 acceptance: on CPU test sizes the planner's grid must come
+    within 25% of the best grid found by exhaustive sweep.
+
+    The sweep and the planner's pick are measured in ONE round-robin table
+    (min-of-k, interleaved), so both sides see the same system noise. On a
+    loaded host a single measurement pass can still invert sub-millisecond
+    orderings, so the planner gets a bounded number of fresh re-plans
+    (force_replan) before the assertion is final.
+    """
+    sig = signature_for("inverse", n, jnp.float32)
+    grids = candidate_grids(n)
+    attempts = []
+    for attempt in range(3):
+        cache = PlanCache(str(tmp_path / f"plans{n}_{attempt}.json"))
+        plan = get_plan("inverse", n, jnp.float32, measure=True, top_k=None,
+                        cache=cache, leaf_solvers=("linalg",))
+        sweep = dict(zip(grids, measure_plans(
+            sig, [Plan(block_size=n // b) for b in grids], iters=5)))
+        t_best, t_plan = min(sweep.values()), sweep[plan.grid(n)]
+        attempts.append((plan.grid(n), t_plan, t_best, sweep))
+        if t_plan <= 1.25 * t_best:
+            return
+    raise AssertionError(
+        f"planner never landed within 25% of the sweep best: {attempts}")
