@@ -17,6 +17,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.compat import AxisType, make_mesh, set_mesh
 from repro.core import (BlockMatrix, multiply_engine, spin_inverse, testing)
 from repro.core.costmodel import tpu_roofline_cost
+from repro.parallel import ShardedBlockMatrix, inverse_program
 from repro.planner import get_plan
 
 
@@ -28,15 +29,23 @@ def main() -> None:
     ap.add_argument("--engine", default=None,
                     choices=["einsum", "allgather", "ring"],
                     help="multiply engine override (default: planner)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="mesh-resident recursion (spin_inverse_sharded): "
+                         "every level's quadrants stay sharded over the "
+                         "mesh, no inter-level gathers")
     args = ap.parse_args()
 
     mesh = make_mesh((4, 4), ("data", "model"),
                      axis_types=(AxisType.Auto,) * 2,
                      devices=jax.devices()[:16])
-    # Plan before device_put: the signature sees the 16 (fake) devices, so
-    # the candidate space includes the allgather/ring SUMMA engines.
+    # Plan INSIDE the mesh context: the signature then carries both the 16
+    # (fake) devices — so the candidate space includes the allgather/ring
+    # SUMMA engines — and the mesh topology, so the cached plan is keyed to
+    # this (4, 4) mesh and never recalled for a different one.
     if args.block is None or args.engine is None:
-        plan = get_plan("inverse", args.n, jnp.float32)
+        with set_mesh(mesh):
+            plan = get_plan("inverse", args.n, jnp.float32,
+                            placement="sharded" if args.sharded else "dense")
         block = args.block or plan.block_size
         engine = args.engine or plan.multiply_engine
         print(f"planner [{plan.source}]: block={plan.block_size} "
@@ -46,13 +55,18 @@ def main() -> None:
     a = testing.make_spd(args.n, jax.random.PRNGKey(0))
     A = BlockMatrix.from_dense(a, block)
     print(f"n={args.n} grid={A.grid}x{A.grid} on mesh {dict(mesh.shape)} "
-          f"engine={engine}")
+          f"engine={engine} path={'sharded' if args.sharded else 'dense'}")
 
     with set_mesh(mesh):
         sh = NamedSharding(mesh, P("data", "model", None, None))
         blocks = jax.device_put(A.blocks, sh)
         with multiply_engine(engine):
-            f = jax.jit(lambda x: spin_inverse(BlockMatrix(x)).blocks)
+            if args.sharded:
+                # one pjit program; quadrants stay mesh-resident per level
+                f = lambda x: inverse_program(
+                    ShardedBlockMatrix(x), engine=engine).blocks
+            else:
+                f = jax.jit(lambda x: spin_inverse(BlockMatrix(x)).blocks)
             jax.block_until_ready(f(blocks))      # compile
             t0 = time.perf_counter()
             inv = jax.block_until_ready(f(blocks))

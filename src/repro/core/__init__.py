@@ -3,9 +3,10 @@ Strassen matrix inversion (SPIN) + the LU baseline, on JAX meshes."""
 
 from .blockmatrix import BlockMatrix, OpCounts, count_ops, block_sharding
 from .multiply import multiply, multiply_engine
-from .spin import spin_inverse, spin_inverse_dense, leaf_inverse
-from .solve import (spin_solve, spin_solve_dense, spin_inverse_batched,
-                    solve_grid_for)
+from .spin import (spin_inverse, spin_inverse_dense, spin_inverse_sharded,
+                   leaf_inverse)
+from .solve import (spin_solve, spin_solve_dense, spin_solve_sharded,
+                    spin_inverse_batched, solve_grid_for)
 from .lu_inverse import lu_inverse, lu_inverse_dense, block_lu
 from .newton_schulz import newton_schulz_polish, residual_norm
 from .solver_ckpt import CheckpointedSpin
@@ -15,9 +16,10 @@ from . import costmodel, testing, verify
 __all__ = [
     "BlockMatrix", "OpCounts", "count_ops", "block_sharding",
     "multiply", "multiply_engine",
-    "spin_inverse", "spin_inverse_dense", "leaf_inverse",
-    "spin_solve", "spin_solve_dense", "spin_inverse_batched",
-    "solve_grid_for",
+    "spin_inverse", "spin_inverse_dense", "spin_inverse_sharded",
+    "leaf_inverse",
+    "spin_solve", "spin_solve_dense", "spin_solve_sharded",
+    "spin_inverse_batched", "solve_grid_for",
     "lu_inverse", "lu_inverse_dense", "block_lu",
     "newton_schulz_polish", "residual_norm", "CheckpointedSpin",
     "costmodel", "testing", "verify",

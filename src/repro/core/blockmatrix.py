@@ -28,6 +28,7 @@ __all__ = [
     "current_counts",
     "block_sharding",
     "constrain_grid",
+    "assemble_quadrants",
 ]
 
 
@@ -97,6 +98,31 @@ def constrain_grid(blocks: jax.Array, grid_axes=("data", "model")) -> jax.Array:
     except (ValueError, RuntimeError):
         # Outside a mesh context (single-device tests) constraints don't apply.
         return blocks
+
+
+def assemble_quadrants(c11: jax.Array, c12: jax.Array, c21: jax.Array,
+                       c22: jax.Array, into: jax.Array | None = None
+                       ) -> jax.Array:
+    """Four (h, h, bs, bs) quadrant grids -> one (2h, 2h, bs, bs) grid.
+
+    Deliberately zeros + dynamic_update_slice, NOT jnp.concatenate: the XLA
+    SPMD partitioner (0.4.x line, CPU at least) mis-lowers concatenate along
+    a sharded dimension when an operand is partially replicated (one mesh
+    axis free), silently corrupting values. dynamic_update_slice assembly
+    lowers correctly for every operand sharding the recursion produces, and
+    is bitwise-identical pure data movement wherever concatenate was right.
+
+    `into` lets a sharding-aware caller supply a pre-anchored (e.g.
+    with_sharding_constraint'ed) zero buffer so the updates inherit the
+    intended output sharding; default is a fresh unconstrained buffer.
+    """
+    h = c11.shape[0]
+    out = (jnp.zeros((2 * h, 2 * h) + c11.shape[2:], c11.dtype)
+           if into is None else into)
+    for (i, j), quad in zip(((0, 0), (0, 1), (1, 0), (1, 1)),
+                            (c11, c12, c21, c22)):
+        out = jax.lax.dynamic_update_slice(out, quad, (i * h, j * h, 0, 0))
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -180,9 +206,8 @@ class BlockMatrix:
     ) -> "BlockMatrix":
         """The paper's arrange: four quadrants -> one matrix (Algorithm 6)."""
         _bump("arranges")
-        top = jnp.concatenate([c11.blocks, c12.blocks], axis=1)
-        bot = jnp.concatenate([c21.blocks, c22.blocks], axis=1)
-        return BlockMatrix(jnp.concatenate([top, bot], axis=0))
+        return BlockMatrix(assemble_quadrants(
+            c11.blocks, c12.blocks, c21.blocks, c22.blocks))
 
     # -- arithmetic ----------------------------------------------------------
     def subtract(self, other: "BlockMatrix") -> "BlockMatrix":

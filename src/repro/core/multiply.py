@@ -40,8 +40,9 @@ from repro import compat
 
 from .blockmatrix import BlockMatrix, _bump
 
-__all__ = ["multiply", "multiply_engine", "matmul_blocks_einsum",
-           "ring_matmul_panels", "allgather_matmul_panels"]
+__all__ = ["multiply", "multiply_engine", "current_engine", "multiply_blocks",
+           "matmul_blocks_einsum", "ring_matmul_panels",
+           "allgather_matmul_panels"]
 
 _ENGINE: contextvars.ContextVar[str] = contextvars.ContextVar(
     "blockmatrix_multiply_engine", default="einsum"
@@ -60,6 +61,17 @@ def multiply_engine(name: str) -> Iterator[None]:
         yield
     finally:
         _ENGINE.reset(token)
+
+
+def current_engine() -> str:
+    """The ambient multiply engine name ('einsum' unless overridden).
+
+    Entry points that jit a whole program must resolve this BEFORE the jit
+    boundary and pass it as a static argument: the engine contextvar is read
+    at trace time, so an executable cached under one engine would otherwise
+    silently serve another.
+    """
+    return _ENGINE.get()
 
 
 def _accum_dtype(dtype) -> jnp.dtype:
@@ -147,6 +159,20 @@ def _shard_map_multiply(a: jax.Array, b: jax.Array, engine: str) -> jax.Array:
     )(a, b)
 
 
+def multiply_blocks(a: jax.Array, b: jax.Array,
+                    engine: str | None = None) -> jax.Array:
+    """Engine dispatch on raw (bi,bk,bs,bs)×(bk,bj,bs,bs) block grids.
+
+    The shared mechanism under both `multiply` (BlockMatrix) and the
+    mesh-resident `ShardedBlockMatrix.multiply`; engine=None reads the
+    ambient `multiply_engine` context.
+    """
+    engine = engine or _ENGINE.get()
+    if engine == "einsum":
+        return matmul_blocks_einsum(a, b)
+    return _shard_map_multiply(a, b, engine)
+
+
 def multiply(a: BlockMatrix, b: BlockMatrix) -> BlockMatrix:
     """The paper's `multiply` (§3.3): C = A · B on the block grid."""
     if a.grid != b.grid or a.block_size != b.block_size:
@@ -154,9 +180,4 @@ def multiply(a: BlockMatrix, b: BlockMatrix) -> BlockMatrix:
             f"grid mismatch: {a.blocks.shape} vs {b.blocks.shape}")
     _bump("multiplies")
     _bump("block_gemms", a.grid ** 3)
-    engine = _ENGINE.get()
-    if engine == "einsum":
-        out = matmul_blocks_einsum(a.blocks, b.blocks)
-    else:
-        out = _shard_map_multiply(a.blocks, b.blocks, engine)
-    return BlockMatrix(out)
+    return BlockMatrix(multiply_blocks(a.blocks, b.blocks))

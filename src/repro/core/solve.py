@@ -37,8 +37,8 @@ from .blockmatrix import BlockMatrix, _bump
 from .multiply import multiply_engine
 from .spin import LEAF_SOLVERS, spin_inverse_dense
 
-__all__ = ["spin_solve", "spin_solve_dense", "spin_inverse_batched",
-           "solve_grid_for"]
+__all__ = ["spin_solve", "spin_solve_dense", "spin_solve_sharded",
+           "spin_inverse_batched", "solve_grid_for"]
 
 
 def solve_grid_for(n: int, max_grid: int = 8, min_block: int = 64) -> int:
@@ -177,6 +177,29 @@ def spin_solve_dense(a: jax.Array, b: jax.Array,
 
         return plan_solve(a, b)
     return _spin_solve_dense(a, b, block_size, leaf_solver, engine)
+
+
+def spin_solve_sharded(a, b: jax.Array, block_size: int | None = None, *,
+                       leaf_solver: str | None = None,
+                       engine: str | None = None,
+                       auto: bool = False) -> jax.Array:
+    """Mesh-resident multi-RHS solve: one pjit program, row-sharded panels.
+
+    The inverse-free Schur recursion with every dense panel pinned to the
+    `data` axis between levels (see repro.parallel.sharded_blockmatrix).
+    `a`: dense (n, n) array (block_size required unless auto/planner),
+    BlockMatrix, or ShardedBlockMatrix; `b`: (n, k) or (n,). Returns X with
+    b's shape; never materializes A⁻¹. auto=True consults the planner under
+    the sharded placement; explicit block_size / leaf_solver / engine
+    arguments always override the planner's choices.
+    """
+    from repro.parallel.sharded_blockmatrix import solve_program
+
+    from .spin import _resolve_sharded_config
+
+    a, leaf_solver, engine, _ = _resolve_sharded_config(
+        "solve", a, block_size, leaf_solver, engine, auto)
+    return solve_program(a, b, leaf_solver=leaf_solver, engine=engine)
 
 
 def spin_inverse_batched(batch: jax.Array, block_size: int | None = None,

@@ -38,7 +38,8 @@ import jax.numpy as jnp
 from .blockmatrix import BlockMatrix, _bump
 from .multiply import multiply, multiply_engine
 
-__all__ = ["spin_inverse", "spin_inverse_dense", "leaf_inverse", "LEAF_SOLVERS"]
+__all__ = ["spin_inverse", "spin_inverse_dense", "spin_inverse_sharded",
+           "leaf_inverse", "LEAF_SOLVERS"]
 
 
 # ---------------------------------------------------------------------------
@@ -157,3 +158,65 @@ def spin_inverse_dense(dense: jax.Array, block_size: int | None = None,
 
         return plan_inverse(dense)
     return _spin_inverse_dense(dense, block_size, leaf_solver, engine)
+
+
+def _resolve_sharded_config(kind: str, a, block_size: int | None,
+                            leaf_solver: str | None, engine: str | None,
+                            auto: bool):
+    """Shared planner dispatch for the sharded entry points.
+
+    Returns (ShardedBlockMatrix, leaf_solver, engine, dense_in). Explicit
+    arguments always win: a given block_size constrains the plan's candidate
+    space instead of being clobbered, and explicit leaf_solver/engine are
+    kept over the planner's picks. The planner is consulted cost-model-only
+    here (measurement of sharded plans goes through the planner's own
+    `execute_* (placement="sharded")`).
+    """
+    from repro.parallel.sharded_blockmatrix import ShardedBlockMatrix
+
+    dense_in = not isinstance(a, (BlockMatrix, ShardedBlockMatrix))
+    n = a.shape[0] if dense_in else a.n
+    if auto or (dense_in and block_size is None):
+        from repro.planner import get_plan
+
+        fixed = block_size if dense_in else a.block_size
+        kw = {"block_sizes": (int(fixed),)} if fixed else {}
+        plan = get_plan(kind, int(n), a.dtype, measure=False,
+                        placement="sharded", **kw)
+        if dense_in and block_size is None:
+            block_size = plan.block_size
+        leaf_solver = leaf_solver or plan.leaf_solver
+        engine = engine or plan.multiply_engine
+
+    if dense_in:
+        a = ShardedBlockMatrix.from_dense(a, block_size)
+    elif isinstance(a, BlockMatrix):
+        a = ShardedBlockMatrix.from_blockmatrix(a)
+    return a, leaf_solver or "linalg", engine, dense_in
+
+
+def spin_inverse_sharded(a, block_size: int | None = None, *,
+                         leaf_solver: str | None = None,
+                         engine: str | None = None, auto: bool = False):
+    """Mesh-resident SPIN inversion: one pjit program, no inter-level gathers.
+
+    The whole Algorithm-2 recursion — quadrant views, 6 multiplies,
+    subtracts, leaf inversions — executes as ONE jitted program whose
+    intermediates carry explicit grid-over-mesh sharding constraints
+    (see repro.parallel.sharded_blockmatrix), so blocks stay device-resident
+    between recursion levels instead of replicating.
+
+    `a`: dense (n, n) array (block_size required unless auto/planner),
+    BlockMatrix, or ShardedBlockMatrix. Dense in -> dense out; block input
+    -> ShardedBlockMatrix (blocks stay on the mesh). Outside any mesh
+    context the constraints are skipped and the result is bitwise identical
+    to the dense path with the same configuration. auto=True consults the
+    planner under the sharded placement; explicit block_size / leaf_solver /
+    engine arguments always override the planner's choices.
+    """
+    from repro.parallel.sharded_blockmatrix import inverse_program
+
+    a, leaf_solver, engine, dense_in = _resolve_sharded_config(
+        "inverse", a, block_size, leaf_solver, engine, auto)
+    out = inverse_program(a, leaf_solver=leaf_solver, engine=engine)
+    return out.to_dense() if dense_in else out

@@ -134,12 +134,21 @@ class ConformanceReport:
     solve_residual: float
     tolerance: float
     op_counts_ok: bool
+    path: str = "dense"                      # "dense" | "sharded"
+    parity_vs_dense: float | None = None     # sharded only: rel. max |Δ|
 
     @property
     def ok(self) -> bool:
         return (self.op_counts_ok
                 and self.inverse_residual < self.tolerance
-                and self.solve_residual < self.tolerance)
+                and self.solve_residual < self.tolerance
+                and (self.parity_vs_dense is None
+                     or self.parity_vs_dense < self.tolerance))
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["ok"] = self.ok
+        return d
 
 
 def run_conformance(grids: Sequence[int] = (2, 4, 8), block_size: int = 32,
@@ -147,12 +156,25 @@ def run_conformance(grids: Sequence[int] = (2, 4, 8), block_size: int = 32,
                     families: Sequence[str] = ("spd", "diag_dominant",
                                                "ill_conditioned_spd",
                                                "block_banded_spd"),
-                    seed: int = 0) -> list[ConformanceReport]:
+                    seed: int = 0,
+                    sharded: bool = False) -> list[ConformanceReport]:
     """Sweep SPIN inversion + multi-RHS solve over the zoo; return reports.
 
     Every report's `.ok` must hold for a conformant build; callers assert
     `not [r for r in reports if not r.ok]`.
+
+    sharded=True runs the mesh-resident recursion
+    (repro.parallel.sharded_blockmatrix) instead of the dense one — same
+    op-count oracle, since the sharded ops bump the same counters — and
+    additionally records `parity_vs_dense`, the relative max deviation from
+    the dense path's result, which `.ok` holds to the same dtype tolerance.
+    Run it under an active mesh (e.g. the tests' fake-device harness) to
+    exercise real sharding; without one it degrades to the dense semantics.
     """
+    if sharded:
+        from repro.parallel.sharded_blockmatrix import (
+            ShardedBlockMatrix, sharded_spin_inverse, sharded_spin_solve)
+
     reports = []
     key = jax.random.PRNGKey(seed)
     for family in families:
@@ -169,14 +191,26 @@ def run_conformance(grids: Sequence[int] = (2, 4, 8), block_size: int = 32,
             bm = BlockMatrix.from_dense(a, block_size)
             rhs = jax.random.normal(kb, (n, n_rhs), jnp.float32).astype(dtype)
 
-            with count_ops() as counts:
-                inv = spin_inverse(bm)
+            parity = None
+            if sharded:
+                sbm = ShardedBlockMatrix.from_blockmatrix(bm)
+                with count_ops() as counts:
+                    inv = sharded_spin_inverse(sbm)
+                x = sharded_spin_solve(sbm, rhs)
+                inv_dense = inv.to_dense()
+                ref = spin_inverse(bm).to_dense()
+                parity = float(_inf_norm(inv_dense - ref)
+                               / (_inf_norm(ref) + 1e-30))
+            else:
+                with count_ops() as counts:
+                    inv = spin_inverse(bm)
+                x = spin_solve(bm, rhs)
+                inv_dense = inv.to_dense()
             try:
                 assert_paper_op_counts(grid, counts)
                 counts_ok = True
             except AssertionError:
                 counts_ok = False
-            x = spin_solve(bm, rhs)
 
             tol = residual_tolerance(dtype)
             if family == "ill_conditioned_spd":
@@ -185,8 +219,10 @@ def run_conformance(grids: Sequence[int] = (2, 4, 8), block_size: int = 32,
             reports.append(ConformanceReport(
                 family=family, grid=grid, block_size=block_size,
                 dtype=str(jnp.dtype(dtype)),
-                inverse_residual=inverse_residual(a, inv.to_dense()),
+                inverse_residual=inverse_residual(a, inv_dense),
                 solve_residual=solve_residual(a, x, rhs),
                 tolerance=tol, op_counts_ok=counts_ok,
+                path="sharded" if sharded else "dense",
+                parity_vs_dense=parity,
             ))
     return reports

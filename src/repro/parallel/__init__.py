@@ -1,5 +1,15 @@
 from .sharding import (DEFAULT_RULES, ShardingRules, logical_spec,
                        named_sharding, shard)
+from .sharded_blockmatrix import (ShardedBlockMatrix, SpecRecord,
+                                  assert_mesh_resident, grid_spec,
+                                  inverse_program, mesh_fingerprint,
+                                  panel_spec, record_specs,
+                                  sharded_spin_inverse, sharded_spin_solve,
+                                  solve_program)
 
 __all__ = ["DEFAULT_RULES", "ShardingRules", "logical_spec", "named_sharding",
-           "shard"]
+           "shard",
+           "ShardedBlockMatrix", "SpecRecord", "assert_mesh_resident",
+           "grid_spec", "panel_spec", "mesh_fingerprint", "record_specs",
+           "sharded_spin_inverse", "sharded_spin_solve",
+           "inverse_program", "solve_program"]

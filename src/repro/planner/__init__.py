@@ -10,7 +10,7 @@ through here.
 """
 
 from .plan import (Plan, ProblemSignature, candidate_grids, enumerate_plans,
-                   signature_for)
+                   mesh_descriptor, signature_for)
 # NB: the `autotune` *function* is deliberately not re-exported — it would
 # shadow the `repro.planner.autotune` submodule attribute. Use
 # `repro.planner.autotune.autotune` (or just `get_plan`).
@@ -24,7 +24,7 @@ from .dispatch import (MEASURE_MAX_N, execute_inverse, execute_solve,
 
 __all__ = [
     "Plan", "ProblemSignature", "signature_for", "enumerate_plans",
-    "candidate_grids",
+    "candidate_grids", "mesh_descriptor",
     "predict_cost", "rank_plans", "measure_plan", "measure_plans",
     "LEAF_SOLVER_RATE",
     "PlanCache", "default_cache", "default_cache_path", "PLAN_CACHE_VERSION",

@@ -141,11 +141,18 @@ def measure_plans(sig: ProblemSignature, plans: list[Plan], *,
     per-candidate batches, so a slow system phase penalizes every candidate
     equally instead of whichever one it happened to land on.
     """
+    import functools
+
     from . import dispatch  # late: dispatch imports this module
 
     operands = _bench_operands(sig)
-    run = (dispatch.execute_solve if sig.kind == "solve"
-           else dispatch.execute_inverse)
+    # Time the executor the plan will actually run under: for sharded-
+    # placement signatures that is the mesh-resident program, not the dense
+    # path (timing the wrong program would persist a mis-measured plan).
+    run = functools.partial(
+        dispatch.execute_solve if sig.kind == "solve"
+        else dispatch.execute_inverse,
+        placement=sig.placement)
     for plan in plans:                       # compile + warm every plan first
         for _ in range(warmup):
             jax.block_until_ready(run(plan, *operands))
@@ -197,11 +204,10 @@ def autotune(sig: ProblemSignature, candidates: list[Plan], *,
     # engine-only variants execute the SAME program — measuring them
     # separately would let timer noise pick the engine. Measure one
     # representative per behavioral group (the best-ranked one, so ties
-    # resolve to the model's preference) and share its time.
-    from repro import compat
-
-    mesh = compat.get_abstract_mesh()
-    mesh_active = bool(mesh is not None and getattr(mesh, "shape", None))
+    # resolve to the model's preference) and share its time. The signature's
+    # mesh descriptor (captured at signature_for time) is the authority: it
+    # is what the plan will be cached under, so grouping must agree with it.
+    mesh_active = bool(sig.mesh)
 
     def behavior(p: Plan) -> tuple:
         key = (p.block_size, p.leaf_solver, p.compute_dtype, p.refine_sweeps)

@@ -31,7 +31,11 @@ from .plan import Plan, ProblemSignature
 __all__ = ["PlanCache", "default_cache", "default_cache_path",
            "PLAN_CACHE_VERSION"]
 
-PLAN_CACHE_VERSION = 1
+# v2: ProblemSignature gained mesh topology + engine placement (mesh-resident
+# SPIN). v1 files hold keys with neither dimension — a plan tuned on a
+# 1-device run could silently serve an 8-device mesh — so the whole file is
+# discarded on version mismatch rather than risking stale reuse.
+PLAN_CACHE_VERSION = 2
 
 _ENV_VAR = "SPIN_PLAN_CACHE"
 

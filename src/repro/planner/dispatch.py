@@ -48,16 +48,19 @@ def get_plan(kind: str, n: int, dtype=jnp.float32, *,
              top_k: int | None = 4,
              cache: PlanCache | None = None,
              force_replan: bool = False,
+             placement: str = "dense",
              **enumerate_kw) -> Plan:
     """Select (or recall) the plan for one (kind, n, dtype) problem.
 
     measure: True / False / "auto" (measure iff n <= MEASURE_MAX_N).
     A cached cost-model-only plan is upgraded the first time the same
-    problem is planned with measurement enabled.
+    problem is planned with measurement enabled. The signature additionally
+    keys on the ambient mesh topology and `placement` ("dense" | "sharded"
+    executors), so a plan tuned without a mesh is never recalled inside one.
     """
     if kind not in ("inverse", "solve"):
         raise ValueError(f"unknown plan kind {kind!r}")
-    sig = signature_for(kind, n, dtype,
+    sig = signature_for(kind, n, dtype, placement=placement,
                         constraint=_constraint_key(enumerate_kw))
     cache = cache or default_cache()
     do_measure = _resolve_measure(measure, n)
@@ -117,13 +120,23 @@ def _refined_inverse(plan: Plan, dense: jax.Array) -> jax.Array:
                                     sweeps=plan.refine_sweeps).to_dense()
 
 
-def execute_inverse(plan: Plan, dense: jax.Array) -> jax.Array:
+def execute_inverse(plan: Plan, dense: jax.Array,
+                    placement: str = "dense") -> jax.Array:
     """Run one concrete inversion plan on a dense (n, n) matrix.
 
     The engine travels as a STATIC jit argument (not just the contextvar):
     the engine is resolved at trace time, so it must be part of the jit
     cache key for two plans differing only in engine to run different code.
+    placement="sharded" runs the mesh-resident program instead of the dense
+    one — the executor the autotuner must time for sharded-placement plans
+    (no refinement stage exists there; enumeration never produces one).
     """
+    if placement == "sharded":
+        from repro.core.spin import spin_inverse_sharded
+
+        return spin_inverse_sharded(dense, plan.block_size,
+                                    leaf_solver=plan.leaf_solver,
+                                    engine=plan.multiply_engine)
     from repro.core.spin import spin_inverse_dense
 
     if plan.compute_dtype != dense.dtype.name and plan.refine_sweeps:
@@ -132,8 +145,15 @@ def execute_inverse(plan: Plan, dense: jax.Array) -> jax.Array:
                               engine=plan.multiply_engine)
 
 
-def execute_solve(plan: Plan, dense: jax.Array, rhs: jax.Array) -> jax.Array:
+def execute_solve(plan: Plan, dense: jax.Array, rhs: jax.Array,
+                  placement: str = "dense") -> jax.Array:
     """Run one concrete solve plan on dense A (n, n) and RHS B (n, k)|(n,)."""
+    if placement == "sharded":
+        from repro.core.solve import spin_solve_sharded
+
+        return spin_solve_sharded(dense, rhs, plan.block_size,
+                                  leaf_solver=plan.leaf_solver,
+                                  engine=plan.multiply_engine)
     from repro.core.solve import spin_solve_dense
 
     return spin_solve_dense(dense, rhs, plan.block_size, plan.leaf_solver,
@@ -176,10 +196,13 @@ def plan_solve(dense: jax.Array, rhs: jax.Array, *, plan: Plan | None = None,
 @functools.lru_cache(maxsize=256)
 def _planned_fields(kind: str, n: int, dtype_name: str,
                     block_sizes: tuple[int, ...] | None,
-                    cache_path: str) -> tuple[int, str]:
+                    cache_path: str, mesh: str) -> tuple[int, str]:
     # cache_path is part of the memo key so a changed $SPIN_PLAN_CACHE (e.g.
     # a test pointing at a tmpdir) is observed instead of serving answers
-    # memoized against the previous cache file.
+    # memoized against the previous cache file. `mesh` is in the key for the
+    # same reason: the ambient mesh context can change between calls, and a
+    # block size memoized under a 1-device run must not serve an 8-device
+    # mesh (get_plan re-derives the same descriptor via signature_for).
     kw = {"block_sizes": block_sizes} if block_sizes else {}
     plan = get_plan(kind, n, jnp.dtype(dtype_name), measure=False, **kw)
     return plan.block_size, plan.leaf_solver
@@ -189,15 +212,18 @@ def planned_block_size(n: int, dtype=jnp.float32, kind: str = "inverse"
                        ) -> int:
     """Cost-model-only block size for (kind, n, dtype) — trace-time safe."""
     from .cache import default_cache_path
+    from .plan import mesh_descriptor
 
     return _planned_fields(kind, int(n), jnp.dtype(dtype).name, None,
-                           default_cache_path())[0]
+                           default_cache_path(), mesh_descriptor())[0]
 
 
 def planned_leaf_solver(n: int, block_size: int, dtype=jnp.float32,
                         kind: str = "inverse") -> str:
     """Leaf solver for a problem whose block grid is already fixed."""
     from .cache import default_cache_path
+    from .plan import mesh_descriptor
 
     return _planned_fields(kind, int(n), jnp.dtype(dtype).name,
-                           (int(block_size),), default_cache_path())[1]
+                           (int(block_size),), default_cache_path(),
+                           mesh_descriptor())[1]

@@ -19,7 +19,22 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["Plan", "ProblemSignature", "signature_for", "enumerate_plans",
-           "candidate_grids"]
+           "candidate_grids", "mesh_descriptor"]
+
+
+def mesh_descriptor() -> str:
+    """Canonical string for the ambient mesh, e.g. "data2:model2" ("" = none).
+
+    The signature dimension that keeps a plan tuned under one mesh topology
+    from being served under another — device_count alone cannot tell a
+    (8, 1) mesh from a (4, 2) one, and tells nothing about a 1-device plan
+    being recalled inside an 8-device mesh context. Delegates to the single
+    canonical implementation so plan-cache keys and the sharded programs'
+    jit fingerprints can never drift apart.
+    """
+    from repro.parallel.sharded_blockmatrix import mesh_fingerprint
+
+    return mesh_fingerprint()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,11 +47,14 @@ class ProblemSignature:
     backend: str         # jax.default_backend(): "cpu" | "gpu" | "tpu"
     device_count: int    # devices in the mesh (paper's worker count)
     cores: int           # parallel lanes for the §4 cost model's PF terms
+    mesh: str = ""       # ambient mesh topology ("data2:model2", "" = none)
+    placement: str = "dense"  # engine placement: "dense" | "sharded"
     constraint: str = ""  # e.g. "bs64" when the block grid is pre-fixed
 
     def key(self) -> str:
         base = (f"{self.kind}/n{self.n}/{self.dtype}/{self.backend}"
-                f"/d{self.device_count}/c{self.cores}")
+                f"/d{self.device_count}/c{self.cores}"
+                f"/m{self.mesh or 'none'}/{self.placement}")
         return f"{base}/{self.constraint}" if self.constraint else base
 
     def as_dict(self) -> dict:
@@ -47,22 +65,31 @@ def signature_for(kind: str, n: int, dtype=jnp.float32, *,
                   backend: str | None = None,
                   device_count: int | None = None,
                   cores: int | None = None,
+                  mesh: str | None = None,
+                  placement: str = "dense",
                   constraint: str = "") -> ProblemSignature:
     """Build the signature for the *current* runtime.
 
     `cores` feeds the cost model's parallelization-factor terms: on CPU the
     XLA thread pool parallelizes block GEMMs across host cores even with one
     "device", so it defaults to os.cpu_count(); on accelerators it is the
-    device count (the paper's `cores` = Spark executors).
+    device count (the paper's `cores` = Spark executors). `mesh` defaults to
+    the ambient mesh topology and `placement` to the dense executors; both
+    are part of the cache key, so plans never cross mesh contexts.
     """
     backend = backend or jax.default_backend()
     device_count = device_count or jax.device_count()
     if cores is None:
         cores = (max(os.cpu_count() or 1, device_count)
                  if backend == "cpu" else device_count)
+    if mesh is None:
+        mesh = mesh_descriptor()
+    if placement not in ("dense", "sharded"):
+        raise ValueError(f"unknown placement {placement!r}")
     return ProblemSignature(kind=kind, n=int(n), dtype=jnp.dtype(dtype).name,
                             backend=backend, device_count=int(device_count),
-                            cores=int(cores), constraint=constraint)
+                            cores=int(cores), mesh=mesh, placement=placement,
+                            constraint=constraint)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,7 +157,9 @@ def enumerate_plans(sig: ProblemSignature, *,
     Newton–Schulz polishes an inverse, not a solve, and `execute_solve`
     would silently ignore the stage — and only where bf16 is a hardware
     dtype (TPU) with float32 results requested; on CPU bf16 is emulated and
-    never wins.
+    never wins. The sharded placement is likewise excluded: the
+    mesh-resident recursion has no refinement stage, so a refined sharded
+    plan would describe an execution that never happens.
     """
     from repro.core.spin import LEAF_SOLVERS  # late: avoid import cycle
 
@@ -141,7 +170,8 @@ def enumerate_plans(sig: ProblemSignature, *,
                    if sig.device_count > 1 else ("einsum",))
     if include_refinement is None:
         include_refinement = sig.backend == "tpu" and sig.dtype == "float32"
-    include_refinement = include_refinement and sig.kind == "inverse"
+    include_refinement = (include_refinement and sig.kind == "inverse"
+                          and sig.placement != "sharded")
 
     if block_sizes is not None:
         grids = sorted({sig.n // bs for bs in block_sizes if sig.n % bs == 0})

@@ -1,0 +1,76 @@
+"""Reusable fake-multi-device mesh harness for distributed tests/benchmarks.
+
+JAX pins the device count at first backend init, so multi-device CPU tests
+must run in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` set BEFORE jax
+imports; the parent pytest process keeps seeing exactly one device. This
+module promotes that subprocess trick (formerly inlined in
+tests/test_distributed.py) into a parameterized runner with result
+marshalling:
+
+  * ``run_py(code, devices=N)``  — run dedented `code` under an N-device
+    fake platform; assert exit 0 and return stdout.
+  * ``run_mesh(code, devices=N)`` — same, but the child calls
+    ``emit_result(obj)`` (injected into its namespace) with JSON-serializable
+    objects; returns the list of emitted objects, so assertions live in the
+    parent test where pytest can report them.
+
+The child inherits the parent environment (including the hermetic
+SPIN_PLAN_CACHE that conftest.py installs) plus PYTHONPATH=<repo>/src.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+__all__ = ["run_py", "run_mesh", "mesh_env", "REPO"]
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_TAG = "MESH_RESULT "
+
+_PRELUDE = f"""\
+import json as _mesh_json
+
+def emit_result(obj):
+    print({_TAG!r} + _mesh_json.dumps(obj), flush=True)
+
+"""
+
+
+def mesh_env(devices: int, extra: dict | None = None) -> dict:
+    """Child environment: N fake host devices + repo sources on PYTHONPATH."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    if extra:
+        env.update(extra)
+    return env
+
+
+def run_py(code: str, devices: int = 16, timeout: int = 420,
+           extra_env: dict | None = None) -> str:
+    """Run dedented `code` on a fake `devices`-device platform; return stdout."""
+    full = _PRELUDE + textwrap.dedent(code)
+    out = subprocess.run([sys.executable, "-c", full],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=mesh_env(devices, extra_env))
+    assert out.returncode == 0, (
+        f"[devices={devices}] child failed\n"
+        f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}")
+    return out.stdout
+
+
+def run_mesh(code: str, devices: int = 16, timeout: int = 420,
+             extra_env: dict | None = None) -> list:
+    """run_py + marshal back every `emit_result(obj)` the child printed."""
+    stdout = run_py(code, devices=devices, timeout=timeout,
+                    extra_env=extra_env)
+    results = [json.loads(line[len(_TAG):])
+               for line in stdout.splitlines() if line.startswith(_TAG)]
+    assert results, f"child never called emit_result(...):\n{stdout}"
+    return results

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import BlockMatrix, count_ops, multiply
+from repro.core import BlockMatrix, count_ops, multiply, spin_inverse, verify
 from repro.core.testing import make_spd
 
 
@@ -77,6 +77,33 @@ def test_op_counting():
     assert c.block_gemms == 4 ** 3
     assert c.subtracts == 1
     assert c.scalar_muls == 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(grids(), st.integers(0, 2 ** 31 - 1))
+def test_quadrant_views_match_dense_slices(gb, seed):
+    b, bs = gb
+    n = b * bs
+    h = n // 2
+    dense = jax.random.normal(jax.random.PRNGKey(seed), (n, n))
+    q = BlockMatrix.from_dense(dense, bs).split()
+    slices = [(slice(0, h), slice(0, h)), (slice(0, h), slice(h, None)),
+              (slice(h, None), slice(0, h)), (slice(h, None), slice(h, None))]
+    for quad, (r, c) in zip(q, slices):
+        assert jnp.array_equal(quad.to_dense(), dense[r, c])
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from([(2, 16), (4, 16), (8, 8)]),
+       st.sampled_from(["float32", "bfloat16"]),
+       st.integers(0, 2 ** 31 - 1))
+def test_spin_inverse_residual_across_grids_dtypes(gb, dtype_name, seed):
+    b, bs = gb
+    dtype = jnp.dtype(dtype_name)
+    a = make_spd(b * bs, jax.random.PRNGKey(seed), dtype=dtype)
+    inv = spin_inverse(BlockMatrix.from_dense(a, bs))
+    resid = verify.inverse_residual(a, inv.to_dense())
+    assert resid < verify.residual_tolerance(dtype), (gb, dtype_name, resid)
 
 
 def test_pytree_roundtrip():

@@ -157,6 +157,81 @@ def test_plan_cache_version_mismatch_invalidates(tmp_path):
     assert PlanCache(str(path)).get(sig) is None
 
 
+def test_plan_cache_schema_v1_files_are_discarded(tmp_path):
+    """ISSUE 3 fix: v1 cache files predate the mesh/placement signature
+    dimensions — a v1 plan tuned on 1 device could silently serve an
+    8-device mesh, so the whole file must be invalidated, not reused."""
+    from repro.planner import PLAN_CACHE_VERSION
+
+    assert PLAN_CACHE_VERSION >= 2
+    path = tmp_path / "plans.json"
+    sig = signature_for("inverse", 128, jnp.float32)
+    # a v1-era file: same layout, old version, key without mesh/placement
+    old_key = (f"{sig.kind}/n{sig.n}/{sig.dtype}/{sig.backend}"
+               f"/d{sig.device_count}/c{sig.cores}")
+    path.write_text(json.dumps({
+        "version": 1,
+        "plans": {old_key: {"sig": {}, "plan": Plan(block_size=8).to_dict()}},
+        "calibration": {},
+    }))
+    assert PlanCache(str(path)).get(sig) is None
+
+
+def test_signature_keys_on_mesh_and_placement(tmp_path):
+    """Signatures differing only in mesh topology or engine placement must
+    never share cache entries."""
+    base = signature_for("inverse", 256, jnp.float32)
+    meshed = signature_for("inverse", 256, jnp.float32, mesh="data4:model2")
+    sharded = signature_for("inverse", 256, jnp.float32, mesh="data4:model2",
+                            placement="sharded")
+    assert base.mesh == ""                 # no ambient mesh in this process
+    assert base.placement == "dense"
+    assert len({base.key(), meshed.key(), sharded.key()}) == 3
+    cache = PlanCache(str(tmp_path / "plans.json"))
+    cache.put(base, Plan(block_size=32))
+    assert cache.get(meshed) is None
+    assert cache.get(sharded) is None
+    assert cache.get(base).block_size == 32
+    with pytest.raises(ValueError):
+        signature_for("inverse", 256, jnp.float32, placement="replicated")
+
+
+def test_signature_mesh_defaults_to_ambient_mesh():
+    from repro.compat import AxisType, make_mesh, set_mesh
+    from repro.planner import mesh_descriptor
+
+    assert mesh_descriptor() == ""
+    mesh = make_mesh((1, 1), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)
+    with set_mesh(mesh):
+        assert mesh_descriptor() == "data1:model1"
+        sig = signature_for("inverse", 128, jnp.float32)
+        assert sig.mesh == "data1:model1"
+    assert signature_for("inverse", 128, jnp.float32).mesh == ""
+
+
+def test_planned_block_size_memo_keys_on_mesh(tmp_path, monkeypatch):
+    """The trace-safe memo must observe a changed ambient mesh rather than
+    serving a block size memoized under the previous topology."""
+    from repro.compat import AxisType, make_mesh, set_mesh
+    from repro.planner import dispatch
+
+    monkeypatch.setenv("SPIN_PLAN_CACHE", str(tmp_path / "plans.json"))
+    dispatch._planned_fields.cache_clear()
+    bs_out = planned_block_size(256)
+    misses_before = dispatch._planned_fields.cache_info().misses
+    mesh = make_mesh((1, 1), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)
+    with set_mesh(mesh):
+        bs_in = planned_block_size(256)
+    assert dispatch._planned_fields.cache_info().misses == misses_before + 1
+    assert 256 % bs_out == 0 and 256 % bs_in == 0
+    # and repeating either context is a memo hit, not a re-plan
+    hits_before = dispatch._planned_fields.cache_info().hits
+    planned_block_size(256)
+    assert dispatch._planned_fields.cache_info().hits == hits_before + 1
+
+
 def test_plan_cache_signature_mismatch_misses(tmp_path):
     cache = PlanCache(str(tmp_path / "plans.json"))
     sig = signature_for("inverse", 128, jnp.float32)

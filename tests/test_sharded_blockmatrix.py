@@ -1,0 +1,177 @@
+"""Property-based ShardedBlockMatrix tests (ISSUE 3 satellite).
+
+Single-device here (the constraints no-op without a mesh, making the sharded
+ops bit-comparable to BlockMatrix's); the on-mesh behaviour is covered by
+tests/test_distributed.py via the mesh harness. Uses hypothesis — the real
+library when installed, conftest.py's deterministic stub otherwise.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BlockMatrix, count_ops, spin_inverse,
+                        spin_inverse_dense, spin_inverse_sharded,
+                        spin_solve_dense, spin_solve_sharded, verify)
+from repro.core.testing import make_spd
+from repro.parallel import (ShardedBlockMatrix, grid_spec, panel_spec,
+                            record_specs, sharded_spin_inverse,
+                            sharded_spin_solve)
+
+
+def grids():
+    return st.sampled_from([(2, 8), (2, 16), (4, 8), (4, 16), (8, 4)])
+
+
+def dtypes():
+    return st.sampled_from(["float32", "bfloat16"])
+
+
+# ------------------------------------------------------------- round-trips
+
+@settings(max_examples=10, deadline=None)
+@given(grids(), st.integers(0, 2 ** 31 - 1))
+def test_from_dense_roundtrip(gb, seed):
+    b, bs = gb
+    n = b * bs
+    dense = jax.random.normal(jax.random.PRNGKey(seed), (n, n))
+    sbm = ShardedBlockMatrix.from_dense(dense, bs)
+    assert sbm.grid == b and sbm.block_size == bs and sbm.n == n
+    assert jnp.array_equal(sbm.to_dense(), dense)
+    # BlockMatrix <-> ShardedBlockMatrix round-trip
+    bm = BlockMatrix.from_dense(dense, bs)
+    back = ShardedBlockMatrix.from_blockmatrix(bm).to_blockmatrix()
+    assert jnp.array_equal(back.blocks, bm.blocks)
+
+
+@settings(max_examples=10, deadline=None)
+@given(grids(), st.integers(0, 2 ** 31 - 1))
+def test_split_arrange_identity(gb, seed):
+    b, bs = gb
+    dense = jax.random.normal(jax.random.PRNGKey(seed), (b * bs, b * bs))
+    sbm = ShardedBlockMatrix.from_dense(dense, bs)
+    back = ShardedBlockMatrix.arrange(*sbm.split())
+    assert jnp.array_equal(back.to_dense(), dense)
+
+
+@settings(max_examples=10, deadline=None)
+@given(grids(), st.integers(0, 2 ** 31 - 1))
+def test_quadrant_views_match_dense_slices(gb, seed):
+    b, bs = gb
+    n = b * bs
+    h = n // 2
+    dense = jax.random.normal(jax.random.PRNGKey(seed), (n, n))
+    q = ShardedBlockMatrix.from_dense(dense, bs).split()
+    slices = [(slice(0, h), slice(0, h)), (slice(0, h), slice(h, None)),
+              (slice(h, None), slice(0, h)), (slice(h, None), slice(h, None))]
+    for quad, (r, c) in zip(q, slices):
+        assert jnp.array_equal(quad.to_dense(), dense[r, c])
+
+
+def test_split_odd_grid_raises():
+    sbm = ShardedBlockMatrix.from_dense(jnp.eye(48), 16)    # grid 3
+    with pytest.raises(ValueError):
+        sbm.split()
+
+
+def test_pytree_roundtrip_preserves_axes():
+    sbm = ShardedBlockMatrix.from_dense(jnp.eye(16), 4, axes=("x", "y"))
+    leaves, treedef = jax.tree.flatten(sbm)
+    back = jax.tree.unflatten(treedef, leaves)
+    assert back.axes == ("x", "y")
+    assert jnp.array_equal(back.blocks, sbm.blocks)
+    out = jax.jit(lambda m: m.scalar_mul(2.0))(sbm)
+    assert jnp.allclose(out.to_dense(), 2 * jnp.eye(16))
+
+
+# --------------------------------------------- recursion residuals / parity
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from([(2, 16), (4, 16), (8, 8)]), dtypes(),
+       st.integers(0, 2 ** 31 - 1))
+def test_sharded_inverse_residual_across_grids_dtypes(gb, dtype_name, seed):
+    b, bs = gb
+    n = b * bs
+    dtype = jnp.dtype(dtype_name)
+    a = make_spd(n, jax.random.PRNGKey(seed), dtype=dtype)
+    inv = sharded_spin_inverse(ShardedBlockMatrix.from_dense(a, bs))
+    resid = verify.inverse_residual(a, inv.to_dense())
+    assert resid < verify.residual_tolerance(dtype), (gb, dtype_name, resid)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.sampled_from([(2, 32), (4, 16)]), st.integers(0, 2 ** 31 - 1))
+def test_sharded_matches_dense_bitwise_off_mesh(gb, seed):
+    """Without a mesh the constraints are no-ops and the op sequence is the
+    dense recursion's — the results must agree bit for bit."""
+    b, bs = gb
+    n = b * bs
+    a = make_spd(n, jax.random.PRNGKey(seed))
+    assert jnp.array_equal(spin_inverse_sharded(a, bs),
+                           spin_inverse_dense(a, bs))
+    rhs = jax.random.normal(jax.random.PRNGKey(seed + 1), (n, 3))
+    assert jnp.array_equal(spin_solve_sharded(a, rhs, bs),
+                           spin_solve_dense(a, rhs, bs))
+
+
+def test_sharded_op_counts_match_paper_oracle():
+    """The sharded recursion bumps the same counters as the dense one, so
+    the Algorithm-2 op-count oracle applies unchanged."""
+    grid, bs = 8, 8
+    a = make_spd(grid * bs, jax.random.PRNGKey(0))
+    with count_ops() as counts:
+        sharded_spin_inverse(ShardedBlockMatrix.from_dense(a, bs))
+    verify.assert_paper_op_counts(grid, counts)
+
+
+def test_sharded_solve_vector_rhs_and_validation():
+    n, bs = 64, 16
+    a = ShardedBlockMatrix.from_dense(make_spd(n, jax.random.PRNGKey(2)), bs)
+    rhs = jax.random.normal(jax.random.PRNGKey(3), (n,))
+    x = sharded_spin_solve(a, rhs)
+    assert x.shape == (n,)
+    assert float(jnp.linalg.norm(a.to_dense() @ x - rhs)
+                 / jnp.linalg.norm(rhs)) < 1e-4
+    with pytest.raises(ValueError):
+        sharded_spin_solve(a, jnp.ones((n + 1, 2)))     # rhs rows mismatch
+    odd = ShardedBlockMatrix.from_dense(make_spd(48, jax.random.PRNGKey(4)),
+                                        16)             # grid 3
+    with pytest.raises(ValueError):
+        sharded_spin_inverse(odd)
+
+
+# ------------------------------------------------------------- spec ledger
+
+def test_ledger_records_skipped_constraints_off_mesh():
+    a = make_spd(64, jax.random.PRNGKey(5))
+    with record_specs() as recs:
+        sharded_spin_inverse(ShardedBlockMatrix.from_dense(a, 16))
+    assert recs, "ops must record even when constraints are skipped"
+    assert all(r.spec is None for r in recs)            # no ambient mesh
+    assert {"split", "multiply", "subtract", "leaf_inverse",
+            "arrange"} <= {r.op for r in recs}
+
+
+def test_grid_and_panel_specs_are_divisibility_aware():
+    class FakeMesh:
+        shape = {"data": 4, "model": 2}
+
+    full = grid_spec(8, 8, FakeMesh())
+    assert tuple(full) == ("data", "model", None, None)
+    partial = grid_spec(2, 8, FakeMesh())               # 2 % 4 != 0
+    assert tuple(partial) == (None, "model", None, None)
+    assert tuple(grid_spec(1, 1, FakeMesh())) == (None, None, None, None)
+    assert tuple(panel_spec(64, FakeMesh())) == ("data", None)
+    assert tuple(panel_spec(2, FakeMesh())) == (None, None)
+
+
+def test_conformance_sweep_sharded_off_mesh_parity_is_exact():
+    """sharded=True without a mesh: parity_vs_dense must be exactly 0 (same
+    op sequence), and every report green."""
+    reports = verify.run_conformance(grids=(2, 4), block_size=16,
+                                     sharded=True)
+    assert all(r.ok for r in reports), [r.as_dict() for r in reports
+                                        if not r.ok]
+    assert all(r.path == "sharded" for r in reports)
+    assert all(r.parity_vs_dense == 0.0 for r in reports)
