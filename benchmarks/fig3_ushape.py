@@ -14,16 +14,14 @@ Standalone usage (the CI smoke-bench):
 
 from __future__ import annotations
 
-import argparse
-import json
-
 import jax
 import jax.numpy as jnp
 
 from repro.core import lu_inverse_dense, spin_inverse_dense, testing
 from repro.planner import (default_cache, execute_inverse, get_plan,
                            predict_cost, signature_for)
-from .common import csv_row, time_fn
+from .common import (bench_arg_parser, csv_row, emit_header, time_fn,
+                     write_json_report)
 
 SIZES = (1024, 2048)
 SPLITS = (2, 4, 8, 16, 32)
@@ -89,22 +87,14 @@ def run(emit, *, sizes=SIZES, splits=SPLITS, json_path: str | None = None
                 out[(n, b)] = (t_spin, None)
         reports.append(_planner_report(n, measured_spin, emit))
 
-    if json_path:
-        with open(json_path, "w") as f:
-            json.dump({"benchmark": "fig3_ushape", "reports": reports},
-                      f, indent=1)
-        emit(f"fig3/json,0,wrote {json_path}")
+    write_json_report({"benchmark": "fig3_ushape", "reports": reports},
+                      json_path, emit, "fig3")
     return out
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--reduced", action="store_true",
-                    help="small sizes for CI smoke-benching")
-    ap.add_argument("--json", default=None, metavar="PATH",
-                    help="write measured-vs-planned report JSON here")
-    args = ap.parse_args()
-    print("name,us_per_call,derived")
+    args = bench_arg_parser(__doc__).parse_args()
+    emit_header()
     if args.reduced:
         run(print, sizes=REDUCED_SIZES, splits=REDUCED_SPLITS,
             json_path=args.json)

@@ -23,14 +23,13 @@ Standalone usage (the CI distributed job):
 
 from __future__ import annotations
 
-import argparse
-import json
 import os
 import subprocess
 import sys
 
 from repro.core.costmodel import CostParams, spin_cost
-from .common import csv_row
+from .common import (bench_arg_parser, csv_row, emit_header,
+                     write_json_report)
 
 N = 1024
 B = 8
@@ -137,22 +136,13 @@ def run(emit, *, n: int = N, grid: int = B, devices=DEVICES,
                    "show scheduling overhead, model_speedup is the paper's "
                    "ideal-line comparison"),
     }
-    if json_path:
-        with open(json_path, "w") as f:
-            json.dump(report, f, indent=1)
-        emit(f"fig5/json,0,wrote {json_path}")
+    write_json_report(report, json_path, emit, "fig5")
     return report
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--reduced", action="store_true",
-                    help="small size for CI smoke-benching")
-    ap.add_argument("--json", default=None, metavar="PATH",
-                    help="write the scaling report JSON here "
-                         "(BENCH_scaling.json in CI)")
-    args = ap.parse_args()
-    print("name,us_per_call,derived")
+    args = bench_arg_parser(__doc__).parse_args()
+    emit_header()
     if args.reduced:
         report = run(print, n=REDUCED_N, grid=REDUCED_B,
                      devices=REDUCED_DEVICES, json_path=args.json)

@@ -27,8 +27,10 @@ def main() -> None:
     ap.add_argument("--block", type=int, default=None,
                     help="block size override (default: planner auto-tunes)")
     ap.add_argument("--engine", default=None,
-                    choices=["einsum", "allgather", "ring"],
-                    help="multiply engine override (default: planner)")
+                    choices=["einsum", "allgather", "ring", "pallas"],
+                    help="multiply engine override (default: planner); "
+                         "'pallas' is the fused-kernel engine (interpret "
+                         "mode off-TPU)")
     ap.add_argument("--sharded", action="store_true",
                     help="mesh-resident recursion (spin_inverse_sharded): "
                          "every level's quadrants stay sharded over the "

@@ -2,7 +2,7 @@
 
 `train_*` lowers train_step; `prefill_*` lowers the prefill forward;
 `decode_*` / `long_*` lower serve_step (one new token against a KV cache of
-seq_len). Eligibility rules (brief + DESIGN.md §7):
+seq_len). Eligibility rules (brief + DESIGN.md §8):
   - decode shapes need `decode_capable` (encoder-only archs skip),
   - long_500k needs `subquadratic` (pure full-attention archs skip).
 """

@@ -15,6 +15,15 @@ block's operands land on one node. On a TPU mesh we provide three engines:
                     `lax.ppermute` ring, double-buffered so the step-(t+1)
                     transfer is in flight during the step-t GEMM
                     (compute/comm overlap; beyond-paper optimization).
+  * ``pallas``    — the fused-kernel engine: local grid contractions run as
+                    ONE tiled Pallas GEMM (`kernels/matmul`) with the whole
+                    k-sum in f32 VMEM scratch, and the Schur updates of
+                    Algorithm 2 (`V = A21·III − A22`, `C11 = I − III·C21`)
+                    fuse the trailing subtract into the same kernel
+                    (`schur_update_blocks`), so the intermediate product
+                    never round-trips through HBM. Under a mesh the SUMMA
+                    gathers stay; only the local GEMM swaps to the kernel.
+                    Off-TPU the kernels run in interpret mode (tests/CI).
 
 All engines accumulate in f32 (`preferred_element_type`) so bf16 inputs hit
 the MXU with f32 accumulation — the TPU analogue of JBlas dgemm.
@@ -41,19 +50,21 @@ from repro import compat
 from .blockmatrix import BlockMatrix, _bump
 
 __all__ = ["multiply", "multiply_engine", "current_engine", "multiply_blocks",
-           "matmul_blocks_einsum", "ring_matmul_panels",
-           "allgather_matmul_panels"]
+           "matmul_blocks_einsum", "matmul_blocks_pallas",
+           "ring_matmul_panels", "allgather_matmul_panels",
+           "pallas_matmul_panels", "schur_update_blocks",
+           "multiply_subtract", "subtract_multiply"]
 
 _ENGINE: contextvars.ContextVar[str] = contextvars.ContextVar(
     "blockmatrix_multiply_engine", default="einsum"
 )
 
-_ENGINES = ("einsum", "allgather", "ring")
+_ENGINES = ("einsum", "allgather", "ring", "pallas")
 
 
 @contextlib.contextmanager
 def multiply_engine(name: str) -> Iterator[None]:
-    """Select the multiply engine ('einsum' | 'allgather' | 'ring')."""
+    """Select the multiply engine ('einsum'|'allgather'|'ring'|'pallas')."""
     if name not in _ENGINES:
         raise ValueError(f"unknown multiply engine {name!r}; want {_ENGINES}")
     token = _ENGINE.set(name)
@@ -90,12 +101,27 @@ def matmul_blocks_einsum(a: jax.Array, b: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
+def matmul_blocks_pallas(a: jax.Array, b: jax.Array) -> jax.Array:
+    """C[i,j] = sum_k A[i,k] @ B[k,j] as ONE fused Pallas GEMM (f32 accum)."""
+    from repro.kernels.matmul import ops as mm_ops  # late: kernels optional
+
+    return mm_ops.grid_matmul(a, b)
+
+
 def allgather_matmul_panels(a_loc: jax.Array, b_loc: jax.Array, *,
                             model_axis: str, data_axis: str) -> jax.Array:
     """SUMMA row/column broadcast as two tiled all-gathers + one local GEMM."""
     a_full = jax.lax.all_gather(a_loc, model_axis, axis=1, tiled=True)
     b_full = jax.lax.all_gather(b_loc, data_axis, axis=0, tiled=True)
     return matmul_blocks_einsum(a_full, b_full)
+
+
+def pallas_matmul_panels(a_loc: jax.Array, b_loc: jax.Array, *,
+                         model_axis: str, data_axis: str) -> jax.Array:
+    """SUMMA gathers with the local grid GEMM swapped for the Pallas kernel."""
+    a_full = jax.lax.all_gather(a_loc, model_axis, axis=1, tiled=True)
+    b_full = jax.lax.all_gather(b_loc, data_axis, axis=0, tiled=True)
+    return matmul_blocks_pallas(a_full, b_full)
 
 
 def ring_matmul_panels(a_loc: jax.Array, b_loc: jax.Array, *, model_axis: str,
@@ -135,20 +161,37 @@ def ring_matmul_panels(a_loc: jax.Array, b_loc: jax.Array, *, model_axis: str,
     return acc
 
 
-def _shard_map_multiply(a: jax.Array, b: jax.Array, engine: str) -> jax.Array:
-    mesh = compat.get_abstract_mesh()
+def _mesh_axes_for(mesh, *grids) -> tuple[str, str] | None:
+    """(data_axis, model_axis) when every (rows, cols) grid divides the mesh.
+
+    Deep recursion levels shrink the grid below the mesh; shard_map needs
+    even divisibility, so those (comm-light) levels fall back to the SPMD
+    partitioner. Explicit SUMMA only pays off when the grid covers the mesh.
+    """
     if mesh is None or not mesh.shape:
-        return matmul_blocks_einsum(a, b)
+        return None
     axis_names = list(mesh.shape.keys())
     data_axis = "data" if "data" in axis_names else axis_names[0]
     model_axis = "model" if "model" in axis_names else axis_names[-1]
-    # Deep recursion levels shrink the grid below the mesh; shard_map needs
-    # even divisibility, so those (comm-light) levels fall back to the SPMD
-    # partitioner. Explicit SUMMA only pays off when the grid covers the mesh.
-    if (a.shape[0] % mesh.shape[data_axis] or a.shape[1] % mesh.shape[model_axis]
-            or b.shape[0] % mesh.shape[data_axis] or b.shape[1] % mesh.shape[model_axis]):
-        return matmul_blocks_einsum(a, b)
-    fn = ring_matmul_panels if engine == "ring" else allgather_matmul_panels
+    for rows, cols in grids:
+        if rows % mesh.shape[data_axis] or cols % mesh.shape[model_axis]:
+            return None
+    return data_axis, model_axis
+
+
+def _local_matmul(engine: str):
+    return matmul_blocks_pallas if engine == "pallas" else matmul_blocks_einsum
+
+
+def _shard_map_multiply(a: jax.Array, b: jax.Array, engine: str) -> jax.Array:
+    mesh = compat.get_abstract_mesh()
+    axes = _mesh_axes_for(mesh, (a.shape[0], a.shape[1]),
+                          (b.shape[0], b.shape[1]))
+    if axes is None:
+        return _local_matmul(engine)(a, b)
+    data_axis, model_axis = axes
+    fn = {"ring": ring_matmul_panels,
+          "pallas": pallas_matmul_panels}.get(engine, allgather_matmul_panels)
     local = functools.partial(fn, model_axis=model_axis, data_axis=data_axis)
     return compat.shard_map(
         local,
@@ -173,6 +216,46 @@ def multiply_blocks(a: jax.Array, b: jax.Array,
     return _shard_map_multiply(a, b, engine)
 
 
+def schur_update_blocks(c: jax.Array, a: jax.Array, b: jax.Array, *,
+                        negate_c: bool, engine: str | None = None
+                        ) -> jax.Array:
+    """Fused multiply+subtract on block grids: A·B − C (negate_c=True, the
+    paper's `V = A21·III − A22`) or C − A·B (negate_c=False, `C11 = I − VII`).
+
+    Under the ``pallas`` engine the subtract folds into the GEMM kernel's
+    f32 accumulator (one kernel, no product round-trip through HBM); for
+    SUMMA placements the gathers stay and the fused kernel runs on the
+    local shard. Every other engine composes `multiply_blocks` with the
+    elementwise subtract in exactly the op order the unfused recursion
+    used, so non-pallas results are bitwise identical to multiply-then-
+    subtract.
+    """
+    engine = engine or _ENGINE.get()
+    if engine == "pallas":
+        from repro.kernels.matmul import ops as mm_ops  # late: optional layer
+
+        alpha, beta = (1.0, -1.0) if negate_c else (-1.0, 1.0)
+        mesh = compat.get_abstract_mesh()
+        axes = _mesh_axes_for(mesh, (a.shape[0], a.shape[1]),
+                              (b.shape[0], b.shape[1]),
+                              (c.shape[0], c.shape[1]))
+        if axes is None:
+            return mm_ops.grid_schur_update(c, a, b, alpha=alpha, beta=beta)
+        data_axis, model_axis = axes
+
+        def local(c_loc, a_loc, b_loc):
+            a_full = jax.lax.all_gather(a_loc, model_axis, axis=1, tiled=True)
+            b_full = jax.lax.all_gather(b_loc, data_axis, axis=0, tiled=True)
+            return mm_ops.grid_schur_update(c_loc, a_full, b_full,
+                                            alpha=alpha, beta=beta)
+
+        spec = P(data_axis, model_axis, None, None)
+        return compat.shard_map(local, mesh=mesh, in_specs=(spec,) * 3,
+                                out_specs=spec)(c, a, b)
+    prod = multiply_blocks(a, b, engine)
+    return prod - c if negate_c else c - prod
+
+
 def multiply(a: BlockMatrix, b: BlockMatrix) -> BlockMatrix:
     """The paper's `multiply` (§3.3): C = A · B on the block grid."""
     if a.grid != b.grid or a.block_size != b.block_size:
@@ -181,3 +264,34 @@ def multiply(a: BlockMatrix, b: BlockMatrix) -> BlockMatrix:
     _bump("multiplies")
     _bump("block_gemms", a.grid ** 3)
     return BlockMatrix(multiply_blocks(a.blocks, b.blocks))
+
+
+def _fused_op_counts(grid: int) -> None:
+    # A fused Schur update is one multiply + one subtract of the paper's
+    # Algorithm 2 — the op-count oracle (6/2/1 per level) must not notice
+    # whether the engine fused them.
+    _bump("multiplies")
+    _bump("block_gemms", grid ** 3)
+    _bump("subtracts")
+
+
+def multiply_subtract(a: BlockMatrix, b: BlockMatrix,
+                      c: BlockMatrix) -> BlockMatrix:
+    """A·B − C (the paper's `V = IV − A22` with IV = A21·III, fused)."""
+    if a.grid != b.grid or a.grid != c.grid:
+        raise ValueError(f"grid mismatch: {a.blocks.shape} vs "
+                         f"{b.blocks.shape} vs {c.blocks.shape}")
+    _fused_op_counts(a.grid)
+    return BlockMatrix(schur_update_blocks(c.blocks, a.blocks, b.blocks,
+                                           negate_c=True))
+
+
+def subtract_multiply(c: BlockMatrix, a: BlockMatrix,
+                      b: BlockMatrix) -> BlockMatrix:
+    """C − A·B (the paper's `C11 = I − VII` with VII = III·C21, fused)."""
+    if a.grid != b.grid or a.grid != c.grid:
+        raise ValueError(f"grid mismatch: {a.blocks.shape} vs "
+                         f"{b.blocks.shape} vs {c.blocks.shape}")
+    _fused_op_counts(a.grid)
+    return BlockMatrix(schur_update_blocks(c.blocks, a.blocks, b.blocks,
+                                           negate_c=False))

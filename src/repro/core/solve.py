@@ -34,7 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from .blockmatrix import BlockMatrix, _bump
-from .multiply import multiply_engine
+from .multiply import current_engine, multiply_engine
 from .spin import LEAF_SOLVERS, spin_inverse_dense
 
 __all__ = ["spin_solve", "spin_solve_dense", "spin_solve_sharded",
@@ -65,10 +65,21 @@ def _apply_blocks(a: BlockMatrix, x: jax.Array) -> jax.Array:
 
     The panel is reshaped onto A's block rows so each (bs×bs)·(bs×k) product
     is a local GEMM; the k-axis stays replicated (RHS panels are thin
-    relative to A). Accumulates in f32 like the multiply engines.
+    relative to A). Accumulates in f32 like the multiply engines. Under the
+    ``pallas`` engine the whole panel product runs as one fused kernel with
+    the k-sum in VMEM scratch.
     """
-    b, _, bs, _ = a.blocks.shape
     _bump("solve_applies")
+    if current_engine() == "pallas":
+        from repro.kernels.matmul import ops as mm_ops  # late: optional layer
+
+        # out_dtype keeps the kernel's f32 accumulator un-rounded on the
+        # flush: a bf16 block matrix must not squeeze an f32 RHS panel
+        # through bf16 on the way out (the einsum branch below never does).
+        out = mm_ops.matmul(mm_ops.blocks_to_dense(a.blocks), x,
+                            out_dtype=_accum_dtype(a.blocks.dtype))
+        return out.astype(x.dtype)
+    b, _, bs, _ = a.blocks.shape
     xb = x.reshape(b, bs, x.shape[-1])
     acc = _accum_dtype(a.blocks.dtype)
     out = jnp.einsum("ijab,jbk->iak", a.blocks, xb,
@@ -80,7 +91,10 @@ def _leaf_solve(block: jax.Array, rhs: jax.Array, solver: str) -> jax.Array:
     """Solve the grid==1 system with the shared leaf-solver registry.
 
     `linalg` uses the LAPACK solve directly (cheaper + better conditioned
-    than inverse-then-multiply); the kernel-backed solvers go through their
+    than inverse-then-multiply); `pallas` factorizes with XLA's LU and runs
+    both substitution sweeps through the blocked Pallas triangular-solve
+    kernel — also inverse-free, with the O(bs²·k) substitutions on the
+    kernel path; the remaining kernel-backed solvers go through their
     explicit inverse, which is the point of having them pluggable.
     """
     _bump("leaf_solves")
@@ -88,6 +102,14 @@ def _leaf_solve(block: jax.Array, rhs: jax.Array, solver: str) -> jax.Array:
     r32 = rhs.astype(jnp.float32)
     if solver == "linalg":
         return jnp.linalg.solve(f32, r32).astype(rhs.dtype)
+    if solver == "pallas":
+        from repro.kernels.leaf_inverse import ops as tri_ops  # late import
+
+        lu, _, perm = jax.lax.linalg.lu(f32)
+        y = tri_ops.triangular_solve(lu, r32[perm], lower=True,
+                                     unit_diagonal=True)
+        x = tri_ops.triangular_solve(lu, y, lower=False)
+        return x.astype(rhs.dtype)
     inv = LEAF_SOLVERS[solver](block)
     return (inv.astype(jnp.float32) @ r32).astype(rhs.dtype)
 
@@ -170,13 +192,15 @@ def spin_solve_dense(a: jax.Array, b: jax.Array,
     auto=True (or block_size=None) routes through the planner; the planned
     path re-enters this function with explicit static arguments, so it is
     bitwise identical to the equivalent explicit call. engine=None inherits
-    the ambient `multiply_engine` context.
+    the ambient `multiply_engine` context — resolved BEFORE the jit
+    boundary so the concrete engine is always the static cache key.
     """
     if auto or block_size is None:
         from repro.planner import plan_solve
 
         return plan_solve(a, b)
-    return _spin_solve_dense(a, b, block_size, leaf_solver, engine)
+    return _spin_solve_dense(a, b, block_size, leaf_solver,
+                             engine or current_engine())
 
 
 def spin_solve_sharded(a, b: jax.Array, block_size: int | None = None, *,
@@ -203,11 +227,15 @@ def spin_solve_sharded(a, b: jax.Array, block_size: int | None = None, *,
 
 
 def spin_inverse_batched(batch: jax.Array, block_size: int | None = None,
-                         leaf_solver: str = "linalg") -> jax.Array:
+                         leaf_solver: str = "linalg", *,
+                         engine: str | None = None) -> jax.Array:
     """SPIN-invert a (batch, n, n) stack of SPD matrices in one program.
 
     block_size=None asks the planner (cost-model path, no measurement —
     safe under an enclosing jit trace) for the per-matrix block size.
+    `engine` selects the multiply engine for every slice (static jit
+    argument, like the dense entry points); None inherits the ambient
+    `multiply_engine` context.
 
     Uses lax.map (a scan over the leading axis) rather than vmap: the scan
     body is the SAME traced computation as `spin_inverse_dense`, so each
@@ -225,12 +253,15 @@ def spin_inverse_batched(batch: jax.Array, block_size: int | None = None,
         from repro.planner import planned_block_size
 
         block_size = planned_block_size(batch.shape[-1], batch.dtype)
-    return _spin_inverse_batched(batch, block_size, leaf_solver)
+    return _spin_inverse_batched(batch, block_size, leaf_solver,
+                                 engine or current_engine())
 
 
-@functools.partial(jax.jit, static_argnames=("block_size", "leaf_solver"))
+@functools.partial(jax.jit,
+                   static_argnames=("block_size", "leaf_solver", "engine"))
 def _spin_inverse_batched(batch: jax.Array, block_size: int,
-                          leaf_solver: str = "linalg") -> jax.Array:
+                          leaf_solver: str = "linalg",
+                          engine: str | None = None) -> jax.Array:
     fn = functools.partial(spin_inverse_dense, block_size=block_size,
-                           leaf_solver=leaf_solver)
+                           leaf_solver=leaf_solver, engine=engine)
     return jax.lax.map(fn, batch)

@@ -36,7 +36,8 @@ import jax
 import jax.numpy as jnp
 
 from .blockmatrix import BlockMatrix, _bump
-from .multiply import multiply, multiply_engine
+from .multiply import (multiply, multiply_engine, multiply_subtract,
+                       subtract_multiply)
 
 __all__ = ["spin_inverse", "spin_inverse_dense", "spin_inverse_sharded",
            "leaf_inverse", "LEAF_SOLVERS"]
@@ -54,10 +55,19 @@ def _leaf_linalg(block: jax.Array) -> jax.Array:
 
 
 def _leaf_gauss_jordan(block: jax.Array) -> jax.Array:
-    # Pallas blocked Gauss-Jordan kernel (TPU target, interpret=True on CPU).
+    # Pallas scalar Gauss-Jordan kernel (TPU target, interpret=True on CPU).
     from repro.kernels.leaf_inverse import ops as gj_ops
 
     return gj_ops.leaf_inverse(block)
+
+
+def _leaf_pallas(block: jax.Array) -> jax.Array:
+    # Pallas BLOCKED Gauss-Jordan: panel elimination with rank-t MXU updates
+    # (kernels/leaf_inverse.blocked_leaf_inverse_pallas) — the leaf half of
+    # the `pallas` engine family.
+    from repro.kernels.leaf_inverse import ops as gj_ops
+
+    return gj_ops.blocked_leaf_inverse(block)
 
 
 def _leaf_qr(block: jax.Array) -> jax.Array:
@@ -71,6 +81,7 @@ def _leaf_qr(block: jax.Array) -> jax.Array:
 LEAF_SOLVERS: dict[str, Callable[[jax.Array], jax.Array]] = {
     "linalg": _leaf_linalg,
     "gauss_jordan": _leaf_gauss_jordan,
+    "pallas": _leaf_pallas,
     "qr": _leaf_qr,
 }
 
@@ -116,13 +127,16 @@ def spin_inverse(a: BlockMatrix, *, leaf_solver: str = "linalg",
     i_ = spin_inverse(a11, leaf_solver=leaf_solver)       # I   = A11^-1
     ii = multiply(a21, i_)                                # II  = A21 I
     iii = multiply(i_, a12)                               # III = I A12
-    iv = multiply(a21, iii)                               # IV  = A21 III
-    v = iv.subtract(a22)                                  # V   = IV - A22  (= -Schur)
+    # IV = A21·III and V = IV − A22 (= −Schur) as ONE fused Schur update:
+    # bitwise-identical multiply-then-subtract on the XLA engines, a single
+    # Pallas kernel under engine="pallas". Op counts book 1 multiply +
+    # 1 subtract either way.
+    v = multiply_subtract(a21, iii, a22)
     vi = spin_inverse(v, leaf_solver=leaf_solver)         # VI  = V^-1
     c12 = multiply(iii, vi)
     c21 = multiply(vi, ii)
-    vii = multiply(iii, c21)
-    c11 = i_.subtract(vii)
+    # VII = III·C21 and C11 = I − VII, same fused Schur-update contract.
+    c11 = subtract_multiply(i_, iii, c21)
     c22 = vi.neg()                                        # scalarMul(VI, -1)
     return BlockMatrix.arrange(c11, c12, c21, c22)
 
@@ -151,13 +165,19 @@ def spin_inverse_dense(dense: jax.Array, block_size: int | None = None,
     solver, and multiply engine; the planned execution calls this very
     function with the chosen static arguments, so `auto=True` is bitwise
     identical to the explicit call for plans without a refinement stage.
-    engine=None inherits the ambient `multiply_engine` context.
+    engine=None inherits the ambient `multiply_engine` context — resolved
+    HERE, before the jit boundary, so the concrete engine name is always
+    the static cache key (an executable traced under one ambient engine
+    must never be served under another).
     """
     if auto or block_size is None:
         from repro.planner import plan_inverse
 
         return plan_inverse(dense)
-    return _spin_inverse_dense(dense, block_size, leaf_solver, engine)
+    from .multiply import current_engine
+
+    return _spin_inverse_dense(dense, block_size, leaf_solver,
+                               engine or current_engine())
 
 
 def _resolve_sharded_config(kind: str, a, block_size: int | None,

@@ -1,3 +1,46 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+"""Pallas kernel packages + the shared interpret-mode policy.
+
+Every kernel wrapper in this package resolves its `interpret=` argument
+through `pallas_interpret_default()` so one environment flag governs the
+whole kernel layer:
+
+  * ``SPIN_PALLAS_INTERPRET=1`` forces interpret mode everywhere — the CI
+    `pallas-interpret` job sets it so fused-kernel correctness is exercised
+    on CPU runners on every push, and it is the escape hatch for debugging
+    on TPU.
+  * unset (the default): compiled on TPU, interpret elsewhere, so the same
+    call sites run in tests (CPU) and production (TPU).
+
+The flag is a PROCESS-START switch for the jitted entry points: it is read
+at trace time, and `interpret` is a static argument only of the inner
+kernel calls — the outer `spin_inverse_dense`-style executables bake it in
+without it being part of their jit key. Set it before the first call into
+a jitted entry point (as the CI job does via the job environment);
+flipping it mid-process only affects direct kernel-wrapper calls and entry
+points that have not been traced yet.
+"""
+
+import os
+
+import jax
+
+__all__ = ["pallas_interpret_default", "PALLAS_INTERPRET_ENV"]
+
+PALLAS_INTERPRET_ENV = "SPIN_PALLAS_INTERPRET"
+
+
+def pallas_interpret_default() -> bool:
+    """True when Pallas kernels should run in interpret mode.
+
+    Read at call time (not import time) so tests and the CI interpret job
+    can flip the environment without re-importing the kernel packages —
+    subject to the trace-time caveat in the module docstring: already-
+    compiled outer jit executables keep the value they were traced with.
+    """
+    flag = os.environ.get(PALLAS_INTERPRET_ENV, "").strip().lower()
+    if flag in ("1", "true", "yes", "on"):
+        return True
+    return jax.default_backend() != "tpu"

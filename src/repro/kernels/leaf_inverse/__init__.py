@@ -1,4 +1,6 @@
 from . import ops, ref
-from .kernel import leaf_inverse_pallas
+from .kernel import (blocked_leaf_inverse_pallas, leaf_inverse_pallas,
+                     triangular_solve_pallas)
 
-__all__ = ["ops", "ref", "leaf_inverse_pallas"]
+__all__ = ["ops", "ref", "leaf_inverse_pallas",
+           "blocked_leaf_inverse_pallas", "triangular_solve_pallas"]

@@ -16,6 +16,13 @@ for double buffering of a batch grid.
 Layout: input (batch, bs, bs); grid = (batch,); one program inverts one
 block. SPIN's leaf has batch=1; the SPIN-Shampoo optimizer batches all layer
 factors through the same kernel.
+
+Two blocked variants ride alongside the scalar sweep (the `pallas` leaf
+solver / leaf-solve path): `blocked_leaf_inverse_pallas` runs the same GJ
+elimination panel-by-panel so all cross-panel work is rank-t MXU GEMMs, and
+`triangular_solve_pallas` is a blocked substitution for triangular (or
+packed-LU) systems — the multi-RHS leaf solve without materializing an
+inverse.
 """
 
 from __future__ import annotations
@@ -27,7 +34,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["leaf_inverse_pallas"]
+from repro.compat import pallas_tpu_compiler_params
+
+__all__ = ["leaf_inverse_pallas", "blocked_leaf_inverse_pallas",
+           "triangular_solve_pallas", "default_panel"]
 
 
 def _gauss_jordan_kernel(a_ref, out_ref, m_ref) -> None:
@@ -78,3 +88,202 @@ def leaf_inverse_pallas(blocks: jax.Array, interpret: bool = False) -> jax.Array
         scratch_shapes=[pltpu.VMEM((bs, 2 * bs), jnp.float32)],
         interpret=interpret,
     )(blocks)
+
+
+# ---------------------------------------------------------------------------
+# Blocked Gauss-Jordan: panel-wise elimination with rank-t MXU updates.
+# ---------------------------------------------------------------------------
+
+
+def default_panel(bs: int, cap: int = 64) -> int:
+    """Largest panel width ≤ cap dividing bs (power-of-two bs -> cap)."""
+    t = min(bs, cap)
+    while bs % t:
+        t -= 1
+    return t
+
+
+def _blocked_gauss_jordan_kernel(a_ref, out_ref, m_ref, *, panel: int) -> None:
+    """Blocked GJ sweep over [A | I]: the scalar elimination of the unblocked
+    kernel runs only INSIDE a t-row panel; everything outside the panel is
+    eliminated with one rank-t update (`factors @ panel` — an MXU GEMM
+    instead of bs vector ops). Panel rows are addressed with sublane
+    dynamic slices; panel *columns* are gathered by multiplying with a
+    one-hot selector matrix E_p, so no lane-dim dynamic addressing exists.
+    """
+    bs = a_ref.shape[1]
+    t = panel
+    a = a_ref[0].astype(jnp.float32)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bs, 2 * bs), 1)
+    eye = (cols - bs == jax.lax.broadcasted_iota(jnp.int32, (bs, 2 * bs), 0))
+    m_ref[...] = jnp.where(cols < bs,
+                           jnp.pad(a, ((0, 0), (0, bs)))[:, :2 * bs],
+                           eye.astype(jnp.float32))
+
+    prow = jax.lax.broadcasted_iota(jnp.int32, (t, 2 * bs), 0)
+    pcol = jax.lax.broadcasted_iota(jnp.int32, (t, 2 * bs), 1)
+    e_rows = jax.lax.broadcasted_iota(jnp.int32, (2 * bs, t), 0)
+    e_cols = jax.lax.broadcasted_iota(jnp.int32, (2 * bs, t), 1)
+
+    def panel_step(p, _):
+        base = p * t
+        m = m_ref[...]
+        pan = jax.lax.dynamic_slice(m, (base, 0), (t, 2 * bs))
+
+        # t unblocked GJ steps restricted to the panel's rows: afterwards the
+        # panel's own t×t diagonal block (columns base..base+t) is I.
+        def mini(j, pan):
+            row_j = jnp.sum(jnp.where(prow == j, pan, 0.0), axis=0)
+            piv = jnp.sum(jnp.where(pcol[0] == base + j, row_j, 0.0))
+            row_n = row_j / piv
+            colv = jnp.sum(jnp.where(pcol == base + j, pan, 0.0), axis=1)
+            sel = jax.lax.broadcasted_iota(jnp.int32, (t,), 0) == j
+            factors = jnp.where(sel, 0.0, colv)
+            pan = pan - factors[:, None] * row_n[None, :]
+            return jnp.where(prow == j, row_n[None, :], pan)
+
+        pan = jax.lax.fori_loop(0, t, mini, pan)
+
+        # Rank-t elimination of columns [base, base+t) from every other row.
+        # E_p gathers those columns by matmul (MXU does the addressing).
+        e = (e_rows == base + e_cols).astype(jnp.float32)
+        factors = jnp.dot(m, e, preferred_element_type=jnp.float32)  # (bs, t)
+        ridx = jax.lax.broadcasted_iota(jnp.int32, (bs,), 0)
+        in_panel = (ridx >= base) & (ridx < base + t)
+        factors = jnp.where(in_panel[:, None], 0.0, factors)
+        m = m - jnp.dot(factors, pan, preferred_element_type=jnp.float32)
+        m = jax.lax.dynamic_update_slice(m, pan, (base, 0))
+        m_ref[...] = m
+        return 0
+
+    jax.lax.fori_loop(0, bs // t, panel_step, 0)
+    out_ref[0] = m_ref[:, bs:].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("panel", "interpret"))
+def blocked_leaf_inverse_pallas(blocks: jax.Array, panel: int | None = None,
+                                interpret: bool = False) -> jax.Array:
+    """Blocked-GJ inverse of a batch of blocks: (batch, bs, bs) -> same."""
+    if blocks.ndim != 3 or blocks.shape[1] != blocks.shape[2]:
+        raise ValueError(f"expected (batch, bs, bs), got {blocks.shape}")
+    batch, bs, _ = blocks.shape
+    t = panel or default_panel(bs)
+    if bs % t:
+        raise ValueError(f"panel={t} must divide block size {bs}")
+    return pl.pallas_call(
+        functools.partial(_blocked_gauss_jordan_kernel, panel=t),
+        grid=(batch,),
+        in_specs=[pl.BlockSpec((1, bs, bs), lambda b: (b, 0, 0))],
+        out_specs=pl.BlockSpec((1, bs, bs), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(blocks.shape, blocks.dtype),
+        scratch_shapes=[pltpu.VMEM((bs, 2 * bs), jnp.float32)],
+        compiler_params=pallas_tpu_compiler_params(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(blocks)
+
+
+# ---------------------------------------------------------------------------
+# Blocked triangular solve: panel substitution with rank-t MXU updates.
+# ---------------------------------------------------------------------------
+
+
+def _tri_solve_kernel(t_ref, b_ref, out_ref, w_ref, *, panel: int,
+                      lower: bool, unit: bool) -> None:
+    """Solve T X = B for triangular T, panel by panel: invert the t×t
+    diagonal block with a mini GJ sweep, then clear its columns from every
+    pending row with one rank-t GEMM. The untargeted triangle of T is
+    masked out (solve_triangular semantics), so a packed-LU matrix can be
+    passed for both the L (unit lower) and U (upper) sweeps.
+    """
+    bs = t_ref.shape[1]
+    k = b_ref.shape[2]
+    t = panel
+    npan = bs // t
+    tm = t_ref[0].astype(jnp.float32)
+    w_ref[...] = b_ref[0].astype(jnp.float32)
+
+    arow = jax.lax.broadcasted_iota(jnp.int32, (t, t + k), 0)
+    acol = jax.lax.broadcasted_iota(jnp.int32, (t, t + k), 1)
+    e_rows = jax.lax.broadcasted_iota(jnp.int32, (bs, t), 0)
+    e_cols = jax.lax.broadcasted_iota(jnp.int32, (bs, t), 1)
+
+    def step(pi, _):
+        p = pi if lower else npan - 1 - pi
+        base = p * t
+        w = w_ref[...]
+        rhs_p = jax.lax.dynamic_slice(w, (base, 0), (t, k))
+        t_rows = jax.lax.dynamic_slice(tm, (base, 0), (t, bs))
+        e = (e_rows == base + e_cols).astype(jnp.float32)
+        d = jnp.dot(t_rows, e, preferred_element_type=jnp.float32)  # (t, t)
+        if unit:
+            tri = jnp.tril(d, -1) if lower else jnp.triu(d, 1)
+            d = tri + jnp.eye(t, dtype=jnp.float32)
+        else:
+            d = jnp.tril(d) if lower else jnp.triu(d)
+
+        # x_p = D^{-1} rhs_p via a mini GJ sweep on [D | rhs_p].
+        aug = jnp.concatenate([d, rhs_p], axis=1)
+
+        def mini(j, aug):
+            row_j = jnp.sum(jnp.where(arow == j, aug, 0.0), axis=0)
+            piv = jnp.sum(jnp.where(acol[0] == j, row_j, 0.0))
+            row_n = row_j / piv
+            colv = jnp.sum(jnp.where(acol == j, aug, 0.0), axis=1)
+            sel = jax.lax.broadcasted_iota(jnp.int32, (t,), 0) == j
+            factors = jnp.where(sel, 0.0, colv)
+            aug = aug - factors[:, None] * row_n[None, :]
+            return jnp.where(arow == j, row_n[None, :], aug)
+
+        aug = jax.lax.fori_loop(0, t, mini, aug)
+        x_p = aug[:, t:]
+
+        # Substitute into every still-pending row with one rank-t GEMM.
+        tcols = jnp.dot(tm, e, preferred_element_type=jnp.float32)  # (bs, t)
+        ridx = jax.lax.broadcasted_iota(jnp.int32, (bs,), 0)
+        pending = (ridx >= base + t) if lower else (ridx < base)
+        tcols = jnp.where(pending[:, None], tcols, 0.0)
+        w = w - jnp.dot(tcols, x_p, preferred_element_type=jnp.float32)
+        w = jax.lax.dynamic_update_slice(w, x_p, (base, 0))
+        w_ref[...] = w
+        return 0
+
+    jax.lax.fori_loop(0, npan, step, 0)
+    out_ref[0] = w_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("panel", "lower", "unit_diagonal",
+                                    "interpret"))
+def triangular_solve_pallas(t: jax.Array, b: jax.Array,
+                            panel: int | None = None, *,
+                            lower: bool = True, unit_diagonal: bool = False,
+                            interpret: bool = False) -> jax.Array:
+    """Solve T X = B for a batch of triangular systems.
+
+    t: (batch, bs, bs) triangular (the other triangle is ignored, so packed
+    LU factors work); b: (batch, bs, k). Returns X with b's shape/dtype.
+    """
+    if t.ndim != 3 or t.shape[1] != t.shape[2]:
+        raise ValueError(f"expected (batch, bs, bs), got {t.shape}")
+    if b.ndim != 3 or b.shape[:2] != t.shape[:2]:
+        raise ValueError(f"rhs {b.shape} incompatible with {t.shape}")
+    batch, bs, _ = t.shape
+    k = b.shape[2]
+    tp = panel or default_panel(bs)
+    if bs % tp:
+        raise ValueError(f"panel={tp} must divide block size {bs}")
+    kernel = functools.partial(_tri_solve_kernel, panel=tp, lower=lower,
+                               unit=unit_diagonal)
+    return pl.pallas_call(
+        kernel,
+        grid=(batch,),
+        in_specs=[pl.BlockSpec((1, bs, bs), lambda i: (i, 0, 0)),
+                  pl.BlockSpec((1, bs, k), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, bs, k), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(b.shape, b.dtype),
+        scratch_shapes=[pltpu.VMEM((bs, k), jnp.float32)],
+        compiler_params=pallas_tpu_compiler_params(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(t, b)

@@ -1,23 +1,51 @@
-"""Jit'd public wrappers for the Gauss-Jordan leaf inverse."""
+"""Jit'd public wrappers for the Gauss-Jordan leaf inverse family.
+
+Interpret mode is resolved through the package-wide policy
+(`repro.kernels.pallas_interpret_default`): compiled on TPU, interpreted
+elsewhere, overridable with ``SPIN_PALLAS_INTERPRET=1``.
+"""
 
 from __future__ import annotations
 
 import jax
 
-from .kernel import leaf_inverse_pallas
+from .. import pallas_interpret_default
+from .kernel import (blocked_leaf_inverse_pallas, leaf_inverse_pallas,
+                     triangular_solve_pallas)
+
+__all__ = ["leaf_inverse", "batched_leaf_inverse", "blocked_leaf_inverse",
+           "batched_blocked_leaf_inverse", "triangular_solve"]
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-@jax.jit
 def leaf_inverse(block: jax.Array) -> jax.Array:
-    """Invert one (bs, bs) block (SPIN's Algorithm-2 leaf)."""
-    return leaf_inverse_pallas(block[None], interpret=not _on_tpu())[0]
+    """Invert one (bs, bs) block (SPIN's Algorithm-2 leaf, scalar GJ)."""
+    return leaf_inverse_pallas(
+        block[None], interpret=pallas_interpret_default())[0]
 
 
-@jax.jit
 def batched_leaf_inverse(blocks: jax.Array) -> jax.Array:
     """Invert (batch, bs, bs) blocks — one grid program per block."""
-    return leaf_inverse_pallas(blocks, interpret=not _on_tpu())
+    return leaf_inverse_pallas(blocks, interpret=pallas_interpret_default())
+
+
+def blocked_leaf_inverse(block: jax.Array,
+                         panel: int | None = None) -> jax.Array:
+    """Invert one (bs, bs) block with the blocked (rank-t MXU) GJ sweep."""
+    return blocked_leaf_inverse_pallas(
+        block[None], panel=panel, interpret=pallas_interpret_default())[0]
+
+
+def batched_blocked_leaf_inverse(blocks: jax.Array,
+                                 panel: int | None = None) -> jax.Array:
+    """Blocked-GJ inverse of (batch, bs, bs) blocks."""
+    return blocked_leaf_inverse_pallas(
+        blocks, panel=panel, interpret=pallas_interpret_default())
+
+
+def triangular_solve(t: jax.Array, b: jax.Array, *, lower: bool = True,
+                     unit_diagonal: bool = False,
+                     panel: int | None = None) -> jax.Array:
+    """Solve T X = B for one (bs, bs) triangular T and (bs, k) B."""
+    return triangular_solve_pallas(
+        t[None], b[None], panel=panel, lower=lower,
+        unit_diagonal=unit_diagonal, interpret=pallas_interpret_default())[0]

@@ -40,3 +40,55 @@ def gauss_jordan_ref(blocks: jax.Array) -> jax.Array:
         return m[:, bs:].astype(a.dtype)
 
     return jax.vmap(one)(blocks)
+
+
+def blocked_gauss_jordan_ref(blocks: jax.Array, panel: int) -> jax.Array:
+    """Step-exact oracle for the BLOCKED GJ kernel: same panel mini-sweeps
+    and rank-t updates in pure jnp (same op order, so same rounding)."""
+
+    def one(a: jax.Array) -> jax.Array:
+        bs = a.shape[0]
+        t = panel
+        m = jnp.concatenate(
+            [a.astype(jnp.float32), jnp.eye(bs, dtype=jnp.float32)], axis=1)
+        prow = jax.lax.broadcasted_iota(jnp.int32, (t, 2 * bs), 0)
+        pcol = jax.lax.broadcasted_iota(jnp.int32, (t, 2 * bs), 1)
+        e_rows = jax.lax.broadcasted_iota(jnp.int32, (2 * bs, t), 0)
+        e_cols = jax.lax.broadcasted_iota(jnp.int32, (2 * bs, t), 1)
+
+        def panel_step(p, m):
+            base = p * t
+            pan = jax.lax.dynamic_slice(m, (base, 0), (t, 2 * bs))
+
+            def mini(j, pan):
+                row_j = jnp.sum(jnp.where(prow == j, pan, 0.0), axis=0)
+                piv = jnp.sum(jnp.where(pcol[0] == base + j, row_j, 0.0))
+                row_n = row_j / piv
+                colv = jnp.sum(jnp.where(pcol == base + j, pan, 0.0), axis=1)
+                sel = jnp.arange(t) == j
+                factors = jnp.where(sel, 0.0, colv)
+                pan = pan - factors[:, None] * row_n[None, :]
+                return jnp.where(prow == j, row_n[None, :], pan)
+
+            pan = jax.lax.fori_loop(0, t, mini, pan)
+            e = (e_rows == base + e_cols).astype(jnp.float32)
+            factors = jnp.dot(m, e, preferred_element_type=jnp.float32)
+            ridx = jnp.arange(bs)
+            in_panel = (ridx >= base) & (ridx < base + t)
+            factors = jnp.where(in_panel[:, None], 0.0, factors)
+            m = m - jnp.dot(factors, pan, preferred_element_type=jnp.float32)
+            return jax.lax.dynamic_update_slice(m, pan, (base, 0))
+
+        m = jax.lax.fori_loop(0, bs // t, panel_step, m)
+        return m[:, bs:].astype(a.dtype)
+
+    return jax.vmap(one)(blocks)
+
+
+def triangular_solve_ref(t: jax.Array, b: jax.Array, *, lower: bool = True,
+                         unit_diagonal: bool = False) -> jax.Array:
+    """LAPACK-semantics oracle (batched solve_triangular in f32)."""
+    x = jax.vmap(lambda ti, bi: jax.scipy.linalg.solve_triangular(
+        ti.astype(jnp.float32), bi.astype(jnp.float32), lower=lower,
+        unit_diagonal=unit_diagonal))(t, b)
+    return x.astype(b.dtype)

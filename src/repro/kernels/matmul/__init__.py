@@ -1,4 +1,4 @@
 from . import ops, ref
-from .kernel import matmul_pallas
+from .kernel import auto_tiles, matmul_pallas, schur_update_pallas
 
-__all__ = ["ops", "ref", "matmul_pallas"]
+__all__ = ["ops", "ref", "matmul_pallas", "schur_update_pallas", "auto_tiles"]

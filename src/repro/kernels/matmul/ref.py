@@ -10,3 +10,11 @@ def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
     """f32-accumulating GEMM — the semantics the kernel must match."""
     out = jnp.dot(a, b, preferred_element_type=jnp.float32)
     return out.astype(a.dtype)
+
+
+def schur_update_ref(c: jax.Array, a: jax.Array, b: jax.Array,
+                     alpha: float = 1.0, beta: float = -1.0) -> jax.Array:
+    """β·C + α·(A@B) in f32 — the fused Schur-update kernel's semantics."""
+    prod = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    out = beta * c.astype(jnp.float32) + alpha * prod
+    return out.astype(c.dtype)

@@ -47,7 +47,7 @@ def _padded_experts(moe: MoEConfig, model_size: int) -> int:
 
 def moe_params(cfg: ArchConfig, model_size_hint: int = 16) -> dict:
     """Weight table. E is padded to the model-axis multiple so EP divides
-    evenly; the router masks the phantom experts (see DESIGN.md §7)."""
+    evenly; the router masks the phantom experts (see DESIGN.md §8)."""
     moe, d = cfg.moe, cfg.d_model
     e_pad = _padded_experts(moe, model_size_hint)
     f = moe.d_ff_expert

@@ -10,7 +10,7 @@ the O(1) recurrent update. Block layout follows the Mamba-2 reference:
 
 TP: heads are sharded over the model axis when divisible (hymba: yes after
 padding; mamba2-130m's 24 heads on 16-way model fall back to replication —
-see DESIGN.md §7).
+see DESIGN.md §8).
 """
 
 from __future__ import annotations

@@ -352,7 +352,14 @@ class ShardedBlockMatrix:
         return self.scalar_mul(-1.0)
 
     def multiply(self, other: "ShardedBlockMatrix") -> "ShardedBlockMatrix":
-        """Distributed multiply through the shared engine dispatcher."""
+        """Distributed multiply through the shared engine dispatcher.
+
+        All engines — including the fused-kernel ``pallas`` engine, whose
+        per-shard grid GEMMs run the Pallas kernel inside shard_map — go
+        through `multiply_blocks`, so `inverse_program(engine="pallas")`
+        needs no sharded-path special casing (the engine remains a static
+        jit key of the one-program entry points).
+        """
         if self.grid != other.grid or self.block_size != other.block_size:
             raise ValueError(f"grid mismatch: {self.blocks.shape} vs "
                              f"{other.blocks.shape}")

@@ -14,8 +14,8 @@ from .plan import (Plan, ProblemSignature, candidate_grids, enumerate_plans,
 # NB: the `autotune` *function* is deliberately not re-exported — it would
 # shadow the `repro.planner.autotune` submodule attribute. Use
 # `repro.planner.autotune.autotune` (or just `get_plan`).
-from .autotune import (LEAF_SOLVER_RATE, measure_plan, measure_plans,
-                       predict_cost, rank_plans)
+from .autotune import (ENGINE_RATE, LEAF_SOLVER_RATE, measure_plan,
+                       measure_plans, predict_cost, rank_plans)
 from .cache import PLAN_CACHE_VERSION, PlanCache, default_cache, \
     default_cache_path
 from .dispatch import (MEASURE_MAX_N, execute_inverse, execute_solve,
@@ -26,7 +26,7 @@ __all__ = [
     "Plan", "ProblemSignature", "signature_for", "enumerate_plans",
     "candidate_grids", "mesh_descriptor",
     "predict_cost", "rank_plans", "measure_plan", "measure_plans",
-    "LEAF_SOLVER_RATE",
+    "LEAF_SOLVER_RATE", "ENGINE_RATE",
     "PlanCache", "default_cache", "default_cache_path", "PLAN_CACHE_VERSION",
     "get_plan", "plan_inverse", "plan_solve", "planned_block_size",
     "planned_leaf_solver", "execute_inverse", "execute_solve",

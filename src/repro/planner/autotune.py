@@ -30,22 +30,37 @@ import time
 
 import jax
 
-from repro.core.costmodel import (CostParams, fit_scale, spin_cost,
+from repro.core.costmodel import (TPU_V5E, CostParams, fit_scale, spin_cost,
                                   tpu_roofline_cost)
 
 from .plan import Plan, ProblemSignature
 
 __all__ = ["predict_cost", "rank_plans", "measure_plan", "measure_plans",
-           "autotune", "LEAF_SOLVER_RATE"]
+           "autotune", "LEAF_SOLVER_RATE", "ENGINE_RATE"]
 
 
 # Relative leaf-inversion rates vs LAPACK getrf/getri, per backend. The
-# interpret-mode penalty for the Pallas kernel off-TPU is deliberately huge:
-# it must never be chosen by the model where it runs emulated.
+# interpret-mode penalty for the Pallas kernels off-TPU is deliberately huge:
+# they must never be chosen by the model where they run emulated. The
+# blocked `pallas` leaf beats the scalar `gauss_jordan` sweep on TPU (rank-t
+# MXU updates vs bs vector steps) and is slightly cheaper off-TPU too (fewer
+# interpreted steps), but both stay firmly priced out off-TPU.
 LEAF_SOLVER_RATE: dict[str, dict[str, float]] = {
     "linalg": {},                               # 1.0 everywhere
     "qr": {"default": 3.0},                     # ~3x getri flops
     "gauss_jordan": {"tpu": 1.2, "default": 200.0},
+    "pallas": {"tpu": 1.1, "default": 150.0},
+}
+
+# Relative distributed-multiply rates per backend, same convention: the
+# fused Pallas engine's GEMMs match the MXU path XLA emits on TPU (its win
+# is modeled separately as fused-update HBM traffic, see predict_cost), and
+# are interpret-emulated — never choosable — everywhere else.
+ENGINE_RATE: dict[str, dict[str, float]] = {
+    "einsum": {},
+    "allgather": {},
+    "ring": {},
+    "pallas": {"tpu": 1.0, "default": 200.0},
 }
 
 _DTYPE_BYTES = {"bfloat16": 2, "float16": 2, "float32": 4, "float64": 8}
@@ -53,6 +68,11 @@ _DTYPE_BYTES = {"bfloat16": 2, "float16": 2, "float32": 4, "float64": 8}
 
 def _leaf_rate(solver: str, backend: str) -> float:
     rates = LEAF_SOLVER_RATE.get(solver, {})
+    return rates.get(backend, rates.get("default", 1.0))
+
+
+def _engine_rate(engine: str, backend: str) -> float:
+    rates = ENGINE_RATE.get(engine, {})
     return rates.get(backend, rates.get("default", 1.0))
 
 
@@ -78,6 +98,17 @@ def predict_cost(sig: ProblemSignature, plan: Plan,
             total = max(r["t_compute"], r["t_memory"], r["t_collective"])
         else:
             total = r["t_compute"] + r["t_memory"] + r["t_collective"]
+        # Schur-update traffic: the roofline books only the multiplies'
+        # HBM bytes; the 2 subtract passes per level each stream 3 half-n²
+        # operand/result arrays through HBM on the XLA engines. The fused
+        # pallas kernel folds them into the GEMM's accumulator flush, so it
+        # is charged none of this term — the roofline credit that makes the
+        # fused engine the modeled winner for b > 1 on TPU.
+        if plan.multiply_engine != "pallas":
+            sub_bytes = sum(
+                2**i * 2 * 3 * (sig.n / 2**(i + 1))**2 * bytes_
+                for i in range(max(b.bit_length() - 1, 0)))
+            total += sub_bytes / (chips * TPU_V5E["hbm_bw"])
         # Leaf re-pricing: the roofline books leaf flops inside t_compute at
         # full chips-parallel rate, but the recursion SERIALIZES leaves (the
         # paper's Eq. 2 — A11 before V) and each runs on one chip. Without
@@ -93,9 +124,10 @@ def predict_cost(sig: ProblemSignature, plan: Plan,
     else:
         p = _cost_params(sig, b, calibration)
         c = spin_cost(p)
-        leaf = c["leafNode"]
-        total = (c["total"] - leaf
-                 + leaf * _leaf_rate(plan.leaf_solver, sig.backend))
+        leaf, mult = c["leafNode"], c["multiply"]
+        total = (c["total"] - leaf - mult
+                 + leaf * _leaf_rate(plan.leaf_solver, sig.backend)
+                 + mult * _engine_rate(plan.multiply_engine, sig.backend))
         if plan.compute_dtype in ("bfloat16", "float16"):
             total *= 1.5                         # emulated half-precision
         # one NS sweep = 2 full-size distributed multiplies (2 n^3 MACs)
@@ -207,11 +239,16 @@ def autotune(sig: ProblemSignature, candidates: list[Plan], *,
     # resolve to the model's preference) and share its time. The signature's
     # mesh descriptor (captured at signature_for time) is the authority: it
     # is what the plan will be cached under, so grouping must agree with it.
+    # The fused `pallas` engine runs different code with or without a mesh,
+    # so it is always its own behavior group.
     mesh_active = bool(sig.mesh)
 
     def behavior(p: Plan) -> tuple:
-        key = (p.block_size, p.leaf_solver, p.compute_dtype, p.refine_sweeps)
-        return key + ((p.multiply_engine,) if mesh_active else ())
+        engine = p.multiply_engine
+        if not mesh_active and engine in ("allgather", "ring"):
+            engine = "einsum"            # SUMMA collapses to einsum off-mesh
+        return (p.block_size, p.leaf_solver, p.compute_dtype,
+                p.refine_sweeps, engine)
 
     reps: dict[tuple, Plan] = {}
     for p in short:

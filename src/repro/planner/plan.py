@@ -98,7 +98,7 @@ class Plan:
 
     block_size: int              # paper's n/b; grid b = n // block_size
     leaf_solver: str = "linalg"
-    multiply_engine: str = "einsum"   # "einsum" | "allgather" | "ring"
+    multiply_engine: str = "einsum"   # "einsum"|"allgather"|"ring"|"pallas"
     compute_dtype: str = "float32"    # dtype the recursion runs in
     refine_sweeps: int = 0            # Newton–Schulz polish sweeps afterwards
     grid_axes: tuple[str, str] = ("data", "model")
@@ -160,6 +160,12 @@ def enumerate_plans(sig: ProblemSignature, *,
     never wins. The sharded placement is likewise excluded: the
     mesh-resident recursion has no refinement stage, so a refined sharded
     plan would describe an execution that never happens.
+
+    The fused-kernel ``pallas`` engine is enumerated by default only on TPU
+    (same gating idea as refinement): off-TPU it runs in interpret mode and
+    can never win, and top_k=None measurement sweeps would pay for warming
+    interpret-mode programs. Pass `engines=(..., "pallas")` to opt in
+    anywhere.
     """
     from repro.core.spin import LEAF_SOLVERS  # late: avoid import cycle
 
@@ -168,6 +174,8 @@ def enumerate_plans(sig: ProblemSignature, *,
     if engines is None:
         engines = (("einsum", "allgather", "ring")
                    if sig.device_count > 1 else ("einsum",))
+        if sig.backend == "tpu":
+            engines = engines + ("pallas",)
     if include_refinement is None:
         include_refinement = sig.backend == "tpu" and sig.dtype == "float32"
     include_refinement = (include_refinement and sig.kind == "inverse"

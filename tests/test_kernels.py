@@ -85,3 +85,108 @@ def test_gauss_jordan_property(bs, seed):
     inv = gj_ops.leaf_inverse(a)
     resid = jnp.linalg.norm(inv @ a - jnp.eye(bs)) / bs ** 0.5
     assert float(resid) < 1e-3
+
+
+# ------------------------------------------------- fused Schur update
+
+
+@pytest.mark.parametrize("alpha,beta", [(1.0, -1.0), (-1.0, 1.0)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_schur_update_fused_matches_ref(alpha, beta, dtype):
+    """β·C + α·(A@B) in one kernel — the paper's V and C11 updates."""
+    ka, kb, kc = jax.random.split(jax.random.PRNGKey(3), 3)
+    a = jax.random.normal(ka, (96, 64), jnp.float32).astype(dtype)
+    b = jax.random.normal(kb, (64, 128), jnp.float32).astype(dtype)
+    c = jax.random.normal(kc, (96, 128), jnp.float32).astype(dtype)
+    got = mm_ops.schur_update(c, a, b, alpha=alpha, beta=beta)
+    want = mm_ref.schur_update_ref(c, a, b, alpha, beta)
+    assert got.dtype == want.dtype
+    err = jnp.max(jnp.abs(got.astype(jnp.float32) - want.astype(jnp.float32)))
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-3
+    assert float(err) < tol, float(err)
+
+
+def test_schur_update_multi_k_step_accumulates_in_f32():
+    """Tiny tiles force k_steps > 1: the C tile must be folded in exactly
+    once (at step 0), not once per k step."""
+    key = jax.random.PRNGKey(4)
+    a = jax.random.normal(key, (64, 64))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (64, 64))
+    c = jax.random.normal(jax.random.fold_in(key, 2), (64, 64))
+    got = mm_ops.schur_update(c, a, b, tiles=(32, 32, 16))
+    assert jnp.allclose(got, mm_ref.schur_update_ref(c, a, b), atol=1e-3)
+
+
+def test_schur_update_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        mm_ops.schur_update(jnp.zeros((64, 32)), jnp.zeros((64, 64)),
+                            jnp.zeros((64, 64)))
+    with pytest.raises(ValueError):
+        mm_ops.schur_update(jnp.zeros((64, 64)), jnp.zeros((64, 32)),
+                            jnp.zeros((64, 64)))
+
+
+def test_grid_matmul_matches_einsum():
+    key = jax.random.PRNGKey(5)
+    a = jax.random.normal(key, (2, 3, 32, 32))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (3, 4, 32, 32))
+    got = mm_ops.grid_matmul(a, b)
+    want = jnp.einsum("ikab,kjbc->ijac", a, b)
+    assert jnp.allclose(got, want, atol=1e-3)
+
+
+# ------------------------------------------------- blocked Gauss-Jordan
+
+
+@pytest.mark.parametrize("bs,panel", [(32, 8), (64, 16), (64, 64), (96, 32),
+                                      (128, 32)])
+def test_blocked_gauss_jordan_sweep(bs, panel):
+    a = make_spd(bs, jax.random.PRNGKey(bs + panel))
+    got = gj_ops.blocked_leaf_inverse(a, panel=panel)
+    want = gj_ref.leaf_inverse_ref(a[None])[0]
+    rel = jnp.linalg.norm(got - want) / jnp.linalg.norm(want)
+    assert float(rel) < 1e-4
+    # step-exact against the pure-jnp twin of the same blocked elimination
+    twin = gj_ref.blocked_gauss_jordan_ref(a[None], panel)[0]
+    assert jnp.allclose(got, twin, atol=1e-6)
+
+
+def test_blocked_gauss_jordan_batched_and_panel_validation():
+    blocks = jnp.stack([make_spd(32, jax.random.PRNGKey(i)) for i in range(4)])
+    got = gj_ops.batched_blocked_leaf_inverse(blocks, panel=8)
+    want = gj_ref.leaf_inverse_ref(blocks)
+    assert jnp.allclose(got, want, atol=1e-3)
+    with pytest.raises(ValueError):
+        gj_ops.blocked_leaf_inverse(blocks[0], panel=7)   # 32 % 7 != 0
+
+
+# ------------------------------------------------- blocked triangular solve
+
+
+@pytest.mark.parametrize("lower", [True, False])
+@pytest.mark.parametrize("unit", [True, False])
+def test_triangular_solve_matches_scipy(lower, unit):
+    key = jax.random.PRNGKey(11)
+    # Off-diagonals scaled down: a unit-diagonal substitution amplifies
+    # N(0,1) off-diagonals exponentially, which only tests overflow, not
+    # the kernel. Compare with a relative tolerance for the same reason.
+    full = jax.random.normal(key, (64, 64)) / 8 + 5 * jnp.eye(64)
+    # pass the FULL matrix: the kernel must ignore the untargeted triangle
+    # (solve_triangular semantics), which is what lets packed LU work.
+    rhs = jax.random.normal(jax.random.fold_in(key, 1), (64, 8))
+    got = gj_ops.triangular_solve(full, rhs, lower=lower, unit_diagonal=unit,
+                                  panel=16)
+    want = gj_ref.triangular_solve_ref(full[None], rhs[None], lower=lower,
+                                       unit_diagonal=unit)[0]
+    rel = jnp.linalg.norm(got - want) / jnp.linalg.norm(want)
+    assert float(rel) < 1e-5, float(rel)
+
+
+def test_triangular_solve_lu_round_trip():
+    """Packed-LU usage: L then U substitution solves the original system."""
+    a = make_spd(64, jax.random.PRNGKey(12))
+    rhs = jax.random.normal(jax.random.PRNGKey(13), (64, 4))
+    lu, _, perm = jax.lax.linalg.lu(a)
+    y = gj_ops.triangular_solve(lu, rhs[perm], lower=True, unit_diagonal=True)
+    x = gj_ops.triangular_solve(lu, y, lower=False)
+    assert jnp.allclose(x, jnp.linalg.solve(a, rhs), atol=1e-4)

@@ -1,0 +1,95 @@
+"""Unit tests for the perf-gate comparison (benchmarks/run.py) — pure
+dict-shuffling, no jax, so the gate's semantics are pinned without timing
+anything."""
+
+import copy
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.run import compare_reports  # noqa: E402
+
+
+def _report(seconds_by_id):
+    return {"benchmark": "spin_engines", "schema": 1,
+            "points": [{"id": i, "seconds": s}
+                       for i, s in seconds_by_id.items()]}
+
+
+BASE = _report({f"inverse/n1024/b{b}/{e}": 0.01 * (1 + b / 8)
+                for b in (1, 2, 4, 8) for e in ("einsum", "pallas")})
+
+
+def test_identical_reports_pass():
+    ok, lines, regressed = compare_reports(copy.deepcopy(BASE), BASE)
+    assert ok and not regressed
+    assert any("median ratio x1.00" in ln for ln in lines)
+
+
+def test_single_point_regression_is_flagged():
+    cur = copy.deepcopy(BASE)
+    cur["points"][3]["seconds"] *= 2.0
+    ok, _, regressed = compare_reports(cur, BASE)
+    assert not ok
+    assert regressed == [BASE["points"][3]["id"]]
+
+
+def test_uniform_machine_speed_difference_passes():
+    """A 3x slower (or faster) runner shifts every ratio equally; the
+    median normalization must cancel it entirely."""
+    for factor in (3.0, 1 / 3.0):
+        cur = copy.deepcopy(BASE)
+        for p in cur["points"]:
+            p["seconds"] *= factor
+        ok, _, regressed = compare_reports(cur, BASE)
+        assert ok and not regressed, factor
+
+
+def test_regression_on_faster_runner_is_still_flagged():
+    """The gate is shape-only on purpose: a 2x-faster runner must not mask
+    a 2x shape regression (raw ratio ~1.0, normalized ~2.0)."""
+    cur = copy.deepcopy(BASE)
+    for p in cur["points"]:
+        p["seconds"] /= 2.0
+    cur["points"][5]["seconds"] *= 2.0
+    ok, _, regressed = compare_reports(cur, BASE)
+    assert not ok
+    assert regressed == [BASE["points"][5]["id"]]
+
+
+def test_mass_improvement_flags_untouched_points():
+    """Documented policy: speeding up most points moves the median and
+    flags the untouched ones — the author regenerates the baseline in the
+    same PR (a loud false positive beats a silent false negative)."""
+    cur = copy.deepcopy(BASE)
+    for p in cur["points"][:6]:
+        p["seconds"] /= 2.0
+    ok, _, regressed = compare_reports(cur, BASE)
+    assert not ok
+    assert set(regressed) <= {p["id"] for p in BASE["points"][6:]}
+
+
+def test_missing_point_fails():
+    cur = copy.deepcopy(BASE)
+    cur["points"] = cur["points"][:-1]
+    ok, lines, _ = compare_reports(cur, BASE)
+    assert not ok
+    assert any("MISSING" in ln for ln in lines)
+
+
+def test_disjoint_reports_cannot_gate():
+    other = _report({"solve/n512/b2/einsum": 0.01})
+    ok, lines, _ = compare_reports(other, BASE)
+    assert not ok
+    assert any("no shared" in ln for ln in lines)
+
+
+def test_tolerance_boundary():
+    cur = copy.deepcopy(BASE)
+    cur["points"][0]["seconds"] *= 1.2       # inside ±25%
+    ok, _, _ = compare_reports(cur, BASE)
+    assert ok
+    cur["points"][0]["seconds"] = BASE["points"][0]["seconds"] * 1.3
+    ok, _, regressed = compare_reports(cur, BASE)
+    assert not ok and regressed == [BASE["points"][0]["id"]]

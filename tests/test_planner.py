@@ -36,7 +36,7 @@ def test_enumerate_plans_multi_device_and_refinement():
                         device_count=4, cores=4)
     plans = enumerate_plans(sig)
     assert {p.multiply_engine for p in plans} == {"einsum", "allgather",
-                                                 "ring"}
+                                                 "ring", "pallas"}
     refined = [p for p in plans if p.refine_sweeps]
     assert refined and all(p.compute_dtype == "bfloat16" for p in refined)
     # refinement is an explicit opt-in elsewhere
