@@ -1,0 +1,130 @@
+"""Online inverse service benchmark: request throughput + the
+update-vs-refactor crossover (DESIGN.md §9).
+
+Three measurements on a `serving.SpinService`:
+
+  * ``solve_recursion`` — requests/sec of the exact coalesced-`spin_solve`
+    path (zero pending churn), `slots` requests per tick;
+  * ``solve_maintained`` — requests/sec once SMW churn has switched solves
+    to the O(n²·c) maintained-inverse GEMM path;
+  * ``crossover`` — the refactor policy's modeled crossover rank for a
+    steady rank-k update stream, AND the rank the live service actually
+    refactored at (they agree by construction — the service asks the same
+    policy — so the sweep documents the deployed decision boundary).
+
+Standalone usage (the shared `--reduced --json` convention of common.py):
+
+    PYTHONPATH=src python -m benchmarks.bench_serve --reduced \
+        --json BENCH_serve.json
+"""
+
+from __future__ import annotations
+
+import time
+
+from .common import bench_arg_parser, csv_row, emit_header, write_json_report
+
+N = 1024
+REQUESTS = 64
+SLOTS = 8
+UPDATE_RANK = 8
+
+REDUCED_N = 256
+REDUCED_REQUESTS = 16
+
+
+def _drain_requests(svc, matrix_id: str, panels) -> float:
+    """Submit every panel, drain, block on the last answer; wall seconds."""
+    import jax
+
+    t0 = time.perf_counter()
+    reqs = [svc.solve(matrix_id, p) for p in panels]
+    svc.run_until_done()
+    jax.block_until_ready(reqs[-1].x)
+    return time.perf_counter() - t0
+
+
+def run(emit, *, n: int = N, requests: int = REQUESTS, slots: int = SLOTS,
+        update_rank: int = UPDATE_RANK,
+        json_path: str | None = None) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import testing
+    from repro.planner import RefactorPolicy
+    from repro.serving import SpinService
+
+    a = testing.make_spd(n, jax.random.PRNGKey(n))
+    panels = [jax.random.normal(jax.random.PRNGKey(1000 + i), (n,))
+              for i in range(requests)]
+
+    svc = SpinService(slots=slots)
+    st = svc.add_matrix("bench", a)
+    points = []
+
+    # -- exact recursion path (fresh matrix), warm then measure -------------
+    _drain_requests(svc, "bench", panels[:slots])      # compile + warm
+    dt = _drain_requests(svc, "bench", panels)
+    points.append({"id": f"serve/solve_recursion/n{n}", "n": n,
+                   "requests": requests, "slots": slots, "seconds": dt,
+                   "req_per_s": requests / dt})
+    emit(csv_row(f"serve/solve_recursion/n{n}", dt / requests,
+                 f"req_per_s={requests / dt:.1f}"))
+
+    # -- maintained-inverse path (after one folded update) ------------------
+    u = jax.random.normal(jax.random.PRNGKey(7), (n, update_rank)) / n ** 0.5
+    up = svc.update("bench", u)
+    svc.run_until_done()
+    assert not up.refactored, "benchmark update unexpectedly refactored"
+    _drain_requests(svc, "bench", panels[:slots])      # compile + warm
+    dt = _drain_requests(svc, "bench", panels)
+    points.append({"id": f"serve/solve_maintained/n{n}", "n": n,
+                   "requests": requests, "slots": slots, "seconds": dt,
+                   "req_per_s": requests / dt})
+    emit(csv_row(f"serve/solve_maintained/n{n}", dt / requests,
+                 f"req_per_s={requests / dt:.1f}"))
+
+    # -- update-vs-refactor crossover sweep ---------------------------------
+    policy = RefactorPolicy()
+    modeled = policy.crossover_rank(n, jnp.float32, step_rank=update_rank)
+    svc2 = SpinService(slots=slots, policy=policy, drift_probes=0)
+    st2 = svc2.add_matrix("sweep", a)
+    observed = None
+    for i in range(4 * max(modeled // update_rank, 1)):
+        upd = svc2.update(
+            "sweep", jax.random.normal(jax.random.PRNGKey(2000 + i),
+                                       (n, update_rank)) / n ** 0.5)
+        svc2.run_until_done()
+        if upd.refactored:
+            observed = (i + 1) * update_rank
+            break
+    points.append({"id": f"serve/crossover/n{n}/k{update_rank}", "n": n,
+                   "update_rank": update_rank,
+                   "modeled_crossover_rank": modeled,
+                   "observed_crossover_rank": observed,
+                   "smw_applied": st2.smw_applied,
+                   "refactors": st2.refactors})
+    emit(csv_row(f"serve/crossover/n{n}/k{update_rank}", 0,
+                 f"modeled_rank={modeled};observed_rank={observed}"))
+
+    report = {"benchmark": "serve", "backend": jax.default_backend(),
+              "n": n, "slots": slots,
+              "plan": {"block_size": st.block_size,
+                       "leaf_solver": st.leaf_solver, "engine": st.engine},
+              "points": points}
+    write_json_report(report, json_path, emit, "serve")
+    return report
+
+
+def main() -> None:
+    args = bench_arg_parser(__doc__).parse_args()
+    emit_header()
+    if args.reduced:
+        run(print, n=REDUCED_N, requests=REDUCED_REQUESTS,
+            json_path=args.json)
+    else:
+        run(print, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,21 +1,32 @@
 """Paper Fig. 2: fastest wall-clock time of SPIN vs LU across matrix sizes
-(minimum over block splits, exactly as the paper reports)."""
+(minimum over block splits, exactly as the paper reports).
+
+Standalone usage (the shared `--reduced --json` convention of common.py):
+
+    PYTHONPATH=src python -m benchmarks.fig2_compare --reduced \
+        --json BENCH_fig2.json
+"""
 
 from __future__ import annotations
 
 import jax
 
 from repro.core import lu_inverse_dense, spin_inverse_dense, testing
-from .common import csv_row, time_fn
+
+from .common import (bench_arg_parser, csv_row, emit_header, time_fn,
+                     write_json_report)
 
 SIZES = (256, 512, 1024, 2048)
 SPLITS = (2, 4, 8, 16)
 
+REDUCED_SIZES = (256, 512)
+REDUCED_SPLITS = (2, 4, 8)
 
-def best_time(algo, n: int) -> tuple[float, int]:
+
+def best_time(algo, n: int, splits=SPLITS) -> tuple[float, int]:
     a = testing.make_spd(n, jax.random.PRNGKey(n))
     best, best_b = float("inf"), 0
-    for b in SPLITS:
+    for b in splits:
         bs = n // b
         if bs < 16 or n % b:
             continue
@@ -25,13 +36,34 @@ def best_time(algo, n: int) -> tuple[float, int]:
     return best, best_b
 
 
-def run(emit) -> dict:
+def run(emit, *, sizes=SIZES, splits=SPLITS,
+        json_path: str | None = None) -> dict:
     out = {}
-    for n in SIZES:
-        t_spin, b_spin = best_time(spin_inverse_dense, n)
-        t_lu, b_lu = best_time(lu_inverse_dense, n)
+    points = []
+    for n in sizes:
+        t_spin, b_spin = best_time(spin_inverse_dense, n, splits)
+        t_lu, b_lu = best_time(lu_inverse_dense, n, splits)
         out[n] = (t_spin, t_lu)
+        points.append({"n": n, "spin_s": t_spin, "spin_best_b": b_spin,
+                       "lu_s": t_lu, "lu_best_b": b_lu,
+                       "spin_speedup": t_lu / t_spin})
         emit(csv_row(f"fig2/spin/n{n}", t_spin, f"best_b={b_spin}"))
         emit(csv_row(f"fig2/lu/n{n}", t_lu,
                      f"best_b={b_lu};spin_speedup={t_lu / t_spin:.2f}x"))
+    write_json_report({"benchmark": "fig2_compare", "points": points},
+                      json_path, emit, "fig2")
     return out
+
+
+def main() -> None:
+    args = bench_arg_parser(__doc__).parse_args()
+    emit_header()
+    if args.reduced:
+        run(print, sizes=REDUCED_SIZES, splits=REDUCED_SPLITS,
+            json_path=args.json)
+    else:
+        run(print, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

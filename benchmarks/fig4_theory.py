@@ -2,7 +2,13 @@
 
 Calibrates the Lemma-4.1 model's three unit-time constants on HALF of the
 measured (b -> seconds) points (least squares, as the paper fits its
-constants) and reports prediction quality on the held-out half."""
+constants) and reports prediction quality on the held-out half.
+
+Standalone usage (the shared `--reduced --json` convention of common.py):
+
+    PYTHONPATH=src python -m benchmarks.fig4_theory --reduced \
+        --json BENCH_fig4.json
+"""
 
 from __future__ import annotations
 
@@ -11,30 +17,36 @@ import numpy as np
 
 from repro.core import spin_inverse_dense, testing
 from repro.core.costmodel import CostParams, fit_scale, spin_cost
-from .common import csv_row, time_fn
+
+from .common import (bench_arg_parser, csv_row, emit_header, time_fn,
+                     write_json_report)
 
 N = 1024
 SPLITS = (2, 4, 8, 16, 32)
 CORES = 1          # this container
 
+REDUCED_N = 256
+REDUCED_SPLITS = (2, 4, 8)
 
-def run(emit) -> dict:
-    a = testing.make_spd(N, jax.random.PRNGKey(N))
+
+def run(emit, *, n=N, splits=SPLITS, json_path: str | None = None) -> dict:
+    a = testing.make_spd(n, jax.random.PRNGKey(n))
     measured = {}
-    for b in SPLITS:
-        bs = N // b
+    for b in splits:
+        bs = n // b
         if bs < 16:
             continue
         measured[b] = time_fn(lambda x: spin_inverse_dense(x, bs), a)
 
     train = {b: t for i, (b, t) in enumerate(sorted(measured.items()))
              if i % 2 == 0}
-    fit = fit_scale(spin_cost, train, n=N, cores=CORES)
+    fit = fit_scale(spin_cost, train, n=n, cores=CORES)
 
     out = {}
+    points = []
     errs = []
     for b, t_meas in sorted(measured.items()):
-        pred = spin_cost(CostParams(n=N, b=b, cores=CORES, t_flop=fit.t_flop,
+        pred = spin_cost(CostParams(n=n, b=b, cores=CORES, t_flop=fit.t_flop,
                                     t_leaf=fit.t_leaf,
                                     t_block_op=fit.t_block_op,
                                     t_elem=fit.t_elem))["total"]
@@ -42,7 +54,25 @@ def run(emit) -> dict:
         rel = abs(pred - t_meas) / t_meas
         errs.append(rel)
         out[b] = (t_meas, pred)
-        emit(csv_row(f"fig4/n{N}/b{b}", t_meas,
+        points.append({"n": n, "b": b, "measured_s": t_meas,
+                       "predicted_s": pred, "split": held, "rel_err": rel})
+        emit(csv_row(f"fig4/n{n}/b{b}", t_meas,
                      f"pred_us={pred * 1e6:.1f};{held};rel_err={rel:.2f}"))
-    emit(f"fig4/mean_rel_err,,{float(np.mean(errs)):.3f}")
+    mean_err = float(np.mean(errs))
+    emit(f"fig4/mean_rel_err,,{mean_err:.3f}")
+    write_json_report({"benchmark": "fig4_theory", "points": points,
+                       "mean_rel_err": mean_err}, json_path, emit, "fig4")
     return out
+
+
+def main() -> None:
+    args = bench_arg_parser(__doc__).parse_args()
+    emit_header()
+    if args.reduced:
+        run(print, n=REDUCED_N, splits=REDUCED_SPLITS, json_path=args.json)
+    else:
+        run(print, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

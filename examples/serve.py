@@ -1,6 +1,11 @@
 """Serving demo: batched prefill + decode with the KV/SSM cache.
 
     PYTHONPATH=src python examples/serve.py --arch hymba-1.5b --tokens 32
+
+The matrix-inversion analogue of this loop — the same continuous-batching
+slot scheduler serving solve/update requests against a maintained SPIN
+inverse instead of tokens against a KV cache — is examples/serve_inverse.py
+(`repro.serving.SpinService`, DESIGN.md §9).
 """
 
 import argparse

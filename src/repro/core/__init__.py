@@ -11,6 +11,9 @@ from .lu_inverse import lu_inverse, lu_inverse_dense, block_lu
 from .newton_schulz import newton_schulz_polish, residual_norm
 from .solver_ckpt import CheckpointedSpin
 from .matrix_io import load_blockmatrix, save_blockmatrix
+from .update import (smw_update_inverse, smw_update_solve,
+                     block_update_factors, apply_inverse, add_low_rank,
+                     DriftTracker, estimate_inverse_residual)
 from . import costmodel, testing, verify
 
 __all__ = [
@@ -22,5 +25,8 @@ __all__ = [
     "spin_inverse_batched", "solve_grid_for",
     "lu_inverse", "lu_inverse_dense", "block_lu",
     "newton_schulz_polish", "residual_norm", "CheckpointedSpin",
+    "smw_update_inverse", "smw_update_solve", "block_update_factors",
+    "apply_inverse", "add_low_rank", "DriftTracker",
+    "estimate_inverse_residual",
     "costmodel", "testing", "verify",
 ]

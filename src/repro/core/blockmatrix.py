@@ -48,6 +48,7 @@ class OpCounts:
     leaf_lu: int = 0
     leaf_solves: int = 0         # grid==1 systems solved by spin_solve
     solve_applies: int = 0       # BlockMatrix × dense-panel products (solve)
+    smw_updates: int = 0         # Woodbury rank-k inverse revisions (update)
     arranges: int = 0
     splits: int = 0
 

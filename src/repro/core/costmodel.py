@@ -25,8 +25,13 @@ import numpy as np
 
 __all__ = [
     "CostParams", "spin_cost", "lu_cost", "spin_schedule",
-    "tpu_roofline_cost", "fit_scale",
+    "tpu_roofline_cost", "fit_scale", "DTYPE_BYTES",
 ]
+
+# Storage bytes per element, shared by every consumer that turns a dtype
+# name into roofline traffic (autotune.predict_cost, refactor_policy) —
+# one table so two pricers can never disagree on a dtype's width.
+DTYPE_BYTES = {"bfloat16": 2, "float16": 2, "float32": 4, "float64": 8}
 
 
 @dataclasses.dataclass(frozen=True)

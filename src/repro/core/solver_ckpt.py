@@ -11,10 +11,17 @@ Spark's partition-recompute granularity.
 
 Granularity control: ``min_grid`` stops checkpointing below a grid size
 (deep levels are cheap to recompute; checkpointing them would be all I/O).
+
+The module also holds the ONLINE-SERVICE snapshot format
+(`save_service_snapshot` / `load_service_snapshot`): one meta.json plus a
+`matrix_io` block directory per (matrix, role) pair, so a restarted
+`serving.SpinService` reloads its maintained inverses instead of paying a
+re-factorization — the restart analogue of the mid-inversion resume above.
 """
 
 from __future__ import annotations
 
+import json
 import os
 from typing import Callable, Optional
 
@@ -23,10 +30,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from .blockmatrix import BlockMatrix
+from .matrix_io import load_blockmatrix, save_blockmatrix
 from .multiply import multiply
 from .spin import leaf_inverse
 
-__all__ = ["CheckpointedSpin"]
+__all__ = ["CheckpointedSpin", "save_service_snapshot",
+           "load_service_snapshot", "validate_snapshot_key"]
 
 
 class CheckpointedSpin:
@@ -103,3 +112,87 @@ class CheckpointedSpin:
         c22 = BlockMatrix(self._neg(vi.blocks))
         c = BlockMatrix.arrange(c11, c12, c21, c22)
         return self._memo(path, lambda: c, g)
+
+
+# ---------------------------------------------------------------------------
+# Online-service snapshots (serving.SpinService state)
+# ---------------------------------------------------------------------------
+
+_SNAPSHOT_VERSION = 1
+
+
+def validate_snapshot_key(key: str) -> None:
+    """Reject ids that would collide or escape in `<mid>__<name>` dirs.
+
+    The block directory name is the plain join of matrix id and role, so
+    ids containing the separator would collide ("m__a"/"inv" vs
+    "m"/"a__inv") and path characters would nest or escape the snapshot
+    directory. Enforced at save AND at `SpinService.add_matrix`, so a bad
+    id fails at admission rather than at the first snapshot.
+    """
+    if (not key or "__" in key or "/" in key or "\\" in key
+            or os.sep in key or key in (".", "..")):
+        raise ValueError(
+            f"snapshot key {key!r} must be non-empty and contain no "
+            "'__', path separators, or dot-dirs")
+
+
+def save_service_snapshot(directory: str, *, meta: dict,
+                          matrices: dict[str, dict[str, BlockMatrix]]
+                          ) -> None:
+    """Persist service state: `meta` (JSON-serializable) + named block
+    matrices per matrix id (e.g. {"ridge": {"a": bm, "inv": bm}}).
+
+    Crash-safe under RE-snapshotting into the same directory: every save
+    writes its blocks into a fresh nonce'd subdirectory
+    (``blocks-<nonce>/<mid>__<name>``, via `matrix_io.save_blockmatrix` —
+    atomic per-row writes, bf16-safe), then atomically swings meta.json to
+    point at it, then garbage-collects older nonce dirs. A crash at ANY
+    point leaves meta.json referencing a complete snapshot (the previous
+    one until the swap, the new one after) — old and new block rows are
+    never mixed under one meta.
+    """
+    import shutil
+    import uuid
+
+    os.makedirs(directory, exist_ok=True)
+    nonce = f"blocks-{uuid.uuid4().hex[:12]}"
+    arrays: dict[str, list[str]] = {}
+    for mid, named in matrices.items():
+        validate_snapshot_key(mid)
+        arrays[mid] = sorted(named)
+        for name, bm in named.items():
+            validate_snapshot_key(name)
+            if not isinstance(bm, BlockMatrix):
+                raise TypeError(
+                    f"snapshot matrix {mid!r}/{name!r} must be a "
+                    f"BlockMatrix, got {type(bm).__name__}")
+            save_blockmatrix(
+                os.path.join(directory, nonce, f"{mid}__{name}"), bm)
+    payload = {"version": _SNAPSHOT_VERSION, "meta": meta, "arrays": arrays,
+               "blocks_dir": nonce}
+    tmp = os.path.join(directory, "meta.json.tmp")
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=1)
+    os.replace(tmp, os.path.join(directory, "meta.json"))
+    for entry in os.listdir(directory):         # GC superseded snapshots
+        if entry.startswith("blocks-") and entry != nonce:
+            shutil.rmtree(os.path.join(directory, entry),
+                          ignore_errors=True)
+
+
+def load_service_snapshot(directory: str
+                          ) -> tuple[dict, dict[str, dict[str, BlockMatrix]]]:
+    """Inverse of `save_service_snapshot`: (meta, {mid: {name: bm}})."""
+    with open(os.path.join(directory, "meta.json")) as f:
+        payload = json.load(f)
+    if payload.get("version") != _SNAPSHOT_VERSION:
+        raise ValueError(
+            f"service snapshot version {payload.get('version')} != "
+            f"{_SNAPSHOT_VERSION}")
+    bdir = os.path.join(directory, payload["blocks_dir"])
+    matrices = {
+        mid: {name: load_blockmatrix(os.path.join(bdir, f"{mid}__{name}"))
+              for name in names}
+        for mid, names in payload["arrays"].items()}
+    return payload["meta"], matrices

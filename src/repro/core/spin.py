@@ -23,7 +23,7 @@ The whole recursion is structural (depth = log2(b) fixed at trace time), so
 `jax.jit(spin_inverse)` compiles the ENTIRE multi-level algorithm into one
 XLA program — no per-level Spark job scheduling. That is the single biggest
 behavioural difference vs the paper's runtime and is accounted for in
-DESIGN.md §9.
+DESIGN.md §10.
 """
 
 from __future__ import annotations

@@ -21,6 +21,8 @@ from .cache import PLAN_CACHE_VERSION, PlanCache, default_cache, \
 from .dispatch import (MEASURE_MAX_N, execute_inverse, execute_solve,
                        get_plan, plan_inverse, plan_solve,
                        planned_block_size, planned_leaf_solver)
+from .refactor_policy import (RefactorDecision, RefactorPolicy,
+                              smw_update_cost)
 
 __all__ = [
     "Plan", "ProblemSignature", "signature_for", "enumerate_plans",
@@ -31,4 +33,5 @@ __all__ = [
     "get_plan", "plan_inverse", "plan_solve", "planned_block_size",
     "planned_leaf_solver", "execute_inverse", "execute_solve",
     "MEASURE_MAX_N",
+    "RefactorDecision", "RefactorPolicy", "smw_update_cost",
 ]

@@ -30,8 +30,8 @@ import time
 
 import jax
 
-from repro.core.costmodel import (TPU_V5E, CostParams, fit_scale, spin_cost,
-                                  tpu_roofline_cost)
+from repro.core.costmodel import (DTYPE_BYTES, TPU_V5E, CostParams,
+                                  fit_scale, spin_cost, tpu_roofline_cost)
 
 from .plan import Plan, ProblemSignature
 
@@ -63,9 +63,6 @@ ENGINE_RATE: dict[str, dict[str, float]] = {
     "pallas": {"tpu": 1.0, "default": 200.0},
 }
 
-_DTYPE_BYTES = {"bfloat16": 2, "float16": 2, "float32": 4, "float64": 8}
-
-
 def _leaf_rate(solver: str, backend: str) -> float:
     rates = LEAF_SOLVER_RATE.get(solver, {})
     return rates.get(backend, rates.get("default", 1.0))
@@ -88,7 +85,7 @@ def predict_cost(sig: ProblemSignature, plan: Plan,
                  calibration: dict | None = None) -> float:
     """Model seconds for `plan` on `sig`'s problem. Lower is better."""
     b = plan.grid(sig.n)
-    bytes_ = _DTYPE_BYTES.get(plan.compute_dtype, 4)
+    bytes_ = DTYPE_BYTES.get(plan.compute_dtype, 4)
 
     if sig.backend == "tpu":
         chips = max(sig.device_count, 1)

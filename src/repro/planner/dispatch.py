@@ -49,6 +49,7 @@ def get_plan(kind: str, n: int, dtype=jnp.float32, *,
              cache: PlanCache | None = None,
              force_replan: bool = False,
              placement: str = "dense",
+             update_rank: int = 0,
              **enumerate_kw) -> Plan:
     """Select (or recall) the plan for one (kind, n, dtype) problem.
 
@@ -57,10 +58,14 @@ def get_plan(kind: str, n: int, dtype=jnp.float32, *,
     problem is planned with measurement enabled. The signature additionally
     keys on the ambient mesh topology and `placement` ("dense" | "sharded"
     executors), so a plan tuned without a mesh is never recalled inside one.
+    `update_rank` is the online-service axis (accumulated SMW churn a
+    re-factorization plan is priced under, see planner.refactor_policy) —
+    zero for ordinary offline problems, leaving their cache keys unchanged.
     """
     if kind not in ("inverse", "solve"):
         raise ValueError(f"unknown plan kind {kind!r}")
     sig = signature_for(kind, n, dtype, placement=placement,
+                        update_rank=update_rank,
                         constraint=_constraint_key(enumerate_kw))
     cache = cache or default_cache()
     do_measure = _resolve_measure(measure, n)

@@ -49,12 +49,18 @@ class ProblemSignature:
     cores: int           # parallel lanes for the §4 cost model's PF terms
     mesh: str = ""       # ambient mesh topology ("data2:model2", "" = none)
     placement: str = "dense"  # engine placement: "dense" | "sharded"
+    update_rank: int = 0  # accumulated SMW churn the plan is priced under
     constraint: str = ""  # e.g. "bs64" when the block grid is pre-fixed
 
     def key(self) -> str:
         base = (f"{self.kind}/n{self.n}/{self.dtype}/{self.backend}"
                 f"/d{self.device_count}/c{self.cores}"
                 f"/m{self.mesh or 'none'}/{self.placement}")
+        # The online-service axis (refactor_policy): a re-inversion plan
+        # priced under accumulated update rank K caches under its own key.
+        # Appended only when nonzero so every pre-existing key is unchanged.
+        if self.update_rank:
+            base += f"/u{self.update_rank}"
         return f"{base}/{self.constraint}" if self.constraint else base
 
     def as_dict(self) -> dict:
@@ -67,6 +73,7 @@ def signature_for(kind: str, n: int, dtype=jnp.float32, *,
                   cores: int | None = None,
                   mesh: str | None = None,
                   placement: str = "dense",
+                  update_rank: int = 0,
                   constraint: str = "") -> ProblemSignature:
     """Build the signature for the *current* runtime.
 
@@ -86,9 +93,12 @@ def signature_for(kind: str, n: int, dtype=jnp.float32, *,
         mesh = mesh_descriptor()
     if placement not in ("dense", "sharded"):
         raise ValueError(f"unknown placement {placement!r}")
+    if update_rank < 0:
+        raise ValueError(f"update_rank must be >= 0, got {update_rank}")
     return ProblemSignature(kind=kind, n=int(n), dtype=jnp.dtype(dtype).name,
                             backend=backend, device_count=int(device_count),
                             cores=int(cores), mesh=mesh, placement=placement,
+                            update_rank=int(update_rank),
                             constraint=constraint)
 
 

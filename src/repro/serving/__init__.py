@@ -1,3 +1,6 @@
 from .engine import Request, ServingEngine
+from .spin_service import (MatrixState, SolveRequest, SpinService,
+                           UpdateRequest)
 
-__all__ = ["Request", "ServingEngine"]
+__all__ = ["Request", "ServingEngine",
+           "SpinService", "SolveRequest", "UpdateRequest", "MatrixState"]

@@ -1,0 +1,470 @@
+"""SpinService: the online inverse server (DESIGN.md §9).
+
+The offline stack (batched solve → planner → mesh-resident recursion →
+fused kernels) answers "invert this matrix once, fast". The ROADMAP's
+north star is serving: a long-lived inverse answering a *stream* of solve
+requests while the matrix itself mutates underneath. `SpinService` makes
+the maintained inverse a request-serving object:
+
+  * **factorization held device-resident** — each admitted matrix keeps
+    its current A and maintained A⁻¹ on device (dense arrays, or
+    `ShardedBlockMatrix` pairs pinned to the mesh — the sharded state
+    never gathers to dense between requests);
+  * **continuous batching** — the same slot scheduler shape as
+    `ServingEngine`: a fixed pool of micro-batch slots, requests admitted
+    from a FIFO queue as slots free up, one `tick()` advances every live
+    slot. Solve slots targeting the same matrix are COALESCED into one
+    multi-RHS call per tick, so c concurrent requests cost one panel
+    recursion/GEMM instead of c;
+  * **exact solve path** — a matrix with zero pending churn serves its
+    coalesced batch through the planner-configured `spin_solve` entry
+    point, bitwise-identical to the offline call on the same stacked
+    panel. Once SMW updates have been folded in, solves come from the
+    maintained inverse in O(n²·c) (`core.update.apply_inverse`);
+  * **incremental updates** — rank-k mutations and block row/column
+    replacements (`UpdateRequest`) are folded into the maintained inverse
+    by Woodbury identity in O(n²k) (`core.update.smw_update_inverse`),
+    with the matrix side kept in lockstep (`add_low_rank`);
+  * **refactor policy** — every update is priced by
+    `planner.refactor_policy.RefactorPolicy` (cumulative SMW spend vs the
+    planned re-inversion, plus drift/rank bounds). At the crossover the
+    service re-factorizes in the background: the fresh inversion is
+    DISPATCHED (XLA async) without blocking the scheduler loop, and the
+    next consumer of the new inverse synchronizes on it naturally;
+  * **snapshot/restore** — `snapshot()`/`SpinService.restore()` persist
+    every matrix's state through `core.solver_ckpt.save_service_snapshot`
+    (which rides `core.matrix_io`'s atomic per-row block writes), so a
+    restarted service resumes bit-identically.
+
+Consistency model: per-matrix FIFO. An update acts as a barrier — solves
+submitted before it complete against the pre-update matrix, solves after
+it see the post-update one; requests on different matrices reorder freely.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import defaultdict, deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blockmatrix import BlockMatrix
+from repro.core.solver_ckpt import validate_snapshot_key as \
+    _validate_snapshot_key
+from repro.core.solve import spin_solve_dense, spin_solve_sharded
+from repro.core.spin import spin_inverse_dense, spin_inverse_sharded
+from repro.core.update import (DriftTracker, add_low_rank, apply_inverse,
+                               block_update_factors,
+                               estimate_inverse_residual,
+                               smw_update_inverse)
+
+__all__ = ["SolveRequest", "UpdateRequest", "MatrixState", "SpinService"]
+
+
+@dataclasses.dataclass
+class SolveRequest:
+    """One A⁻¹·b request. rhs: (n,) or (n, c); x gets the matching shape."""
+
+    uid: int
+    matrix_id: str
+    rhs: jax.Array
+    # filled by the service
+    x: Optional[jax.Array] = None
+    done: bool = False
+    slot: Optional[int] = None
+    path: Optional[str] = None       # "recursion" | "maintained"
+
+
+@dataclasses.dataclass
+class UpdateRequest:
+    """One matrix mutation: rank-k factors (u, v) with A ← A + u vᵀ, or a
+    symmetric block row/column replacement (delta_row, index) — see
+    `core.update.block_update_factors`."""
+
+    uid: int
+    matrix_id: str
+    u: Optional[jax.Array] = None
+    v: Optional[jax.Array] = None
+    delta_row: Optional[jax.Array] = None
+    index: Optional[int] = None
+    # filled by the service
+    done: bool = False
+    refactored: Optional[bool] = None
+    reason: Optional[str] = None     # policy verdict ("smw"/"crossover"/…)
+
+
+@dataclasses.dataclass
+class MatrixState:
+    """Device-resident serving state of one maintained inverse."""
+
+    matrix_id: str
+    a: object                        # dense (n, n) array | ShardedBlockMatrix
+    inv: object                      # same representation as `a`
+    placement: str                   # "dense" | "sharded"
+    block_size: int
+    leaf_solver: str
+    engine: str | None
+    plan: object                     # the planner Plan the config came from
+    drift: DriftTracker
+    n: int = 0
+    dtype: object = None
+    smw_spent_s: float = 0.0         # modeled SMW spend since last factorize
+    smw_applied: int = 0
+    refactors: int = 0
+
+    @property
+    def pending_rank(self) -> int:
+        return self.drift.update_rank
+
+
+class SpinService:
+    """Continuous-batching solve/update server over maintained inverses."""
+
+    def __init__(self, *, slots: int = 8, policy=None,
+                 drift_probes: int = 2, drift_scale: float = 10.0,
+                 seed: int = 0):
+        from repro.planner import RefactorPolicy  # late: planner is optional
+
+        self.slots = slots
+        self.policy = policy or RefactorPolicy()
+        self.drift_probes = drift_probes         # 0 disables probe estimates
+        self.drift_scale = drift_scale
+        self._free: deque[int] = deque(range(slots))
+        self._live: dict[int, SolveRequest] = {}
+        self._queue: deque = deque()
+        self._matrices: dict[str, MatrixState] = {}
+        self._uid = itertools.count()
+        self._key = jax.random.PRNGKey(seed)
+        self.ticks = 0
+        self.stats = {"solves": 0, "batches": 0, "coalesced_cols": 0,
+                      "updates_smw": 0, "updates_refactor": 0}
+
+    # -- matrix admission ----------------------------------------------------
+
+    def add_matrix(self, matrix_id: str, a, *, block_size: int | None = None,
+                   leaf_solver: str | None = None, engine: str | None = None,
+                   sharded: bool = False) -> MatrixState:
+        """Admit a matrix: plan its configuration, factorize, hold resident.
+
+        `a`: dense (n, n) SPD array, or a `ShardedBlockMatrix` (implies
+        sharded placement). Explicit block_size / leaf_solver / engine
+        override the planner, mirroring the offline entry points.
+        """
+        from repro.parallel.sharded_blockmatrix import ShardedBlockMatrix
+        from repro.planner import get_plan
+
+        if matrix_id in self._matrices:
+            raise ValueError(f"matrix {matrix_id!r} already admitted")
+        _validate_snapshot_key(matrix_id)       # snapshot dirs embed the id
+        if isinstance(a, ShardedBlockMatrix):
+            sharded = True
+            n, dtype = a.n, a.dtype
+            if block_size and block_size != a.block_size:
+                raise ValueError(
+                    f"block_size={block_size} conflicts with the sharded "
+                    f"operand's fixed grid (block_size {a.block_size})")
+            block_size = a.block_size
+        elif isinstance(a, BlockMatrix):
+            n, dtype = a.n, a.dtype
+            # pre-blocked input: its grid is the plan constraint (same rule
+            # as core.spin._resolve_sharded_config) unless explicitly
+            # re-blocked — the dense path densifies and can re-block.
+            block_size = block_size or a.block_size
+        else:
+            n, dtype = a.shape[0], a.dtype
+        placement = "sharded" if sharded else "dense"
+        kw = {"block_sizes": (int(block_size),)} if block_size else {}
+        plan = get_plan("inverse", n, dtype, measure=False,
+                        placement=placement, **kw)
+        block_size = block_size or plan.block_size
+        if isinstance(a, BlockMatrix) and not isinstance(
+                a, ShardedBlockMatrix):
+            a = a.to_dense()
+        if sharded and not isinstance(a, ShardedBlockMatrix):
+            a = ShardedBlockMatrix.from_dense(a, block_size)
+        state = MatrixState(
+            matrix_id=matrix_id, a=a, inv=None, placement=placement,
+            block_size=int(block_size),
+            leaf_solver=leaf_solver or plan.leaf_solver,
+            engine=engine or plan.multiply_engine, plan=plan,
+            drift=DriftTracker.for_dtype(dtype, scale=self.drift_scale),
+            n=int(n), dtype=jnp.dtype(dtype))
+        self._factorize(state)
+        self._matrices[matrix_id] = state
+        return state
+
+    def matrix(self, matrix_id: str) -> MatrixState:
+        return self._matrices[matrix_id]
+
+    def _factorize(self, state: MatrixState) -> None:
+        """(Re)compute the maintained inverse. Dispatch only — XLA executes
+        asynchronously, so the scheduler keeps ticking while the inversion
+        runs; the first consumer of `state.inv` synchronizes on it."""
+        if state.placement == "sharded":
+            state.inv = spin_inverse_sharded(
+                state.a, leaf_solver=state.leaf_solver, engine=state.engine)
+        else:
+            state.inv = spin_inverse_dense(
+                state.a, state.block_size, state.leaf_solver,
+                engine=state.engine)
+        state.drift.reset()
+        state.smw_spent_s = 0.0
+
+    # -- request plumbing ----------------------------------------------------
+
+    def submit(self, req) -> None:
+        if req.matrix_id not in self._matrices:
+            raise KeyError(f"unknown matrix {req.matrix_id!r}")
+        self._queue.append(req)
+
+    def solve(self, matrix_id: str, rhs: jax.Array) -> SolveRequest:
+        req = SolveRequest(uid=next(self._uid), matrix_id=matrix_id, rhs=rhs)
+        self.submit(req)
+        return req
+
+    def update(self, matrix_id: str, u: jax.Array | None = None,
+               v: jax.Array | None = None, *,
+               delta_row: jax.Array | None = None,
+               index: int | None = None) -> UpdateRequest:
+        if (u is None) == (delta_row is None):
+            raise ValueError("pass exactly one of (u[, v]) or "
+                             "(delta_row, index)")
+        # Validate HERE, not at apply time: a malformed request must fail
+        # at submission, never mid-_admit with the queue in hand.
+        state = self._matrices.get(matrix_id)
+        if state is None:
+            raise KeyError(f"unknown matrix {matrix_id!r}")
+        if u is not None:
+            uc = u.shape[1] if u.ndim == 2 else 1
+            vv = u if v is None else v
+            vc = vv.shape[1] if vv.ndim == 2 else 1
+            if u.shape[0] != state.n or vv.shape[0] != state.n or uc != vc:
+                raise ValueError(
+                    f"update factors must be (n={state.n}, k) with equal "
+                    f"k, got u{tuple(u.shape)} v{tuple(vv.shape)}")
+        if delta_row is not None:
+            if index is None:
+                raise ValueError("delta_row updates require index=")
+            bs = delta_row.shape[0]
+            if delta_row.shape != (bs, state.n) or state.n % bs:
+                raise ValueError(
+                    f"delta_row must be (bs, n={state.n}) with bs | n, "
+                    f"got {delta_row.shape}")
+            if not 0 <= index < state.n // bs:
+                raise ValueError(f"block index {index} out of range for "
+                                 f"n={state.n}, bs={bs}")
+        req = UpdateRequest(uid=next(self._uid), matrix_id=matrix_id,
+                            u=u, v=v if v is not None else u,
+                            delta_row=delta_row, index=index)
+        self.submit(req)
+        return req
+
+    # -- scheduling ----------------------------------------------------------
+
+    def _live_matrices(self) -> set[str]:
+        return {r.matrix_id for r in self._live.values()}
+
+    def _admit(self) -> None:
+        """One FIFO pass over the queue. Updates execute inline the moment
+        no earlier solve on their matrix is still live; a deferred request
+        bars every later request on the same matrix (per-matrix order)."""
+        deferred: deque = deque()
+        barred: set[str] = set()
+        live = self._live_matrices()
+        try:
+            while self._queue:
+                req = self._queue.popleft()
+                m = req.matrix_id
+                if isinstance(req, UpdateRequest):
+                    if m in barred or m in live:
+                        deferred.append(req)
+                        barred.add(m)
+                    else:
+                        self._apply_update(req)
+                else:
+                    if m in barred or not self._free:
+                        deferred.append(req)
+                        barred.add(m)
+                    else:
+                        slot = self._free.popleft()
+                        req.slot = slot
+                        self._live[slot] = req
+                        live.add(m)
+        finally:
+            # An exception mid-pass (a failing update, an interrupt) must
+            # not drop the requests already moved onto the local deque —
+            # reattach them ahead of whatever is still queued.
+            deferred.extend(self._queue)
+            self._queue = deferred
+
+    def tick(self) -> int:
+        """Admit + advance: one coalesced solve per matrix with live slots.
+        Returns the number of live slots after recycling (always 0 today —
+        solves are single-shot — but the contract mirrors ServingEngine)."""
+        self._admit()
+        if not self._live:
+            return len(self._live)
+        groups: dict[str, list[SolveRequest]] = defaultdict(list)
+        for slot in sorted(self._live):
+            req = self._live[slot]
+            groups[req.matrix_id].append(req)
+        for matrix_id, reqs in groups.items():
+            state = self._matrices[matrix_id]
+            panels = [r.rhs if r.rhs.ndim == 2 else r.rhs[:, None]
+                      for r in reqs]
+            rhs = panels[0] if len(panels) == 1 else jnp.concatenate(
+                panels, axis=1)
+            x, path = self._solve_batch(state, rhs)
+            col = 0
+            for req, panel in zip(reqs, panels):
+                c = panel.shape[1]
+                out = x[:, col:col + c]
+                col += c
+                req.x = out[:, 0] if req.rhs.ndim == 1 else out
+                req.path = path
+                req.done = True
+                del self._live[req.slot]
+                self._free.append(req.slot)
+            self.stats["solves"] += len(reqs)
+            self.stats["batches"] += 1
+            self.stats["coalesced_cols"] += rhs.shape[1]
+        self.ticks += 1
+        return len(self._live)
+
+    def run_until_done(self, max_ticks: int = 10_000) -> None:
+        for _ in range(max_ticks):
+            if not self._queue and not self._live:
+                return
+            self.tick()
+        raise RuntimeError("service did not drain")
+
+    # -- execution -----------------------------------------------------------
+
+    def _solve_batch(self, state: MatrixState, rhs: jax.Array
+                     ) -> tuple[jax.Array, str]:
+        """Serve one coalesced (n, c) panel for `state`.
+
+        Zero pending churn → the planner-configured `spin_solve` entry
+        point (bitwise-identical to the offline call on the same panel).
+        Pending SMW churn → one panel GEMM against the maintained inverse.
+        """
+        if state.pending_rank == 0:
+            if state.placement == "sharded":
+                x = spin_solve_sharded(state.a, rhs,
+                                       leaf_solver=state.leaf_solver,
+                                       engine=state.engine)
+            else:
+                x = spin_solve_dense(state.a, rhs, state.block_size,
+                                     state.leaf_solver, engine=state.engine)
+            return x, "recursion"
+        return apply_inverse(state.inv, rhs), "maintained"
+
+    def _apply_update(self, req: UpdateRequest) -> None:
+        state = self._matrices[req.matrix_id]
+        if req.delta_row is not None:
+            u, v = block_update_factors(req.delta_row, req.index, state.n)
+        else:
+            u = req.u if req.u.ndim == 2 else req.u[:, None]
+            v = req.v if req.v.ndim == 2 else req.v[:, None]
+        k = u.shape[1]
+        decision = self.policy.decide(
+            state.n, state.dtype, new_rank=k,
+            pending_rank=state.pending_rank,
+            cumulative_s=state.smw_spent_s,
+            residual_est=state.drift.residual_est,
+            drift_tolerance=state.drift.tolerance,
+            placement=state.placement)
+        state.a = add_low_rank(state.a, u, v)
+        if decision.refactor:
+            self._factorize(state)               # background: async dispatch
+            state.refactors += 1
+            self.stats["updates_refactor"] += 1
+        else:
+            state.inv = smw_update_inverse(state.inv, u, v)
+            state.drift.note(k)
+            state.smw_spent_s = decision.cumulative_s
+            state.smw_applied += 1
+            self.stats["updates_smw"] += 1
+            if self.drift_probes:
+                self._key, sub = jax.random.split(self._key)
+                state.drift.residual_est = estimate_inverse_residual(
+                    lambda p: apply_inverse(state.a, p), state.inv, sub,
+                    state.n, probes=self.drift_probes)
+        req.done = True
+        req.refactored = decision.refactor
+        req.reason = decision.reason
+
+    # -- snapshot / restore --------------------------------------------------
+
+    def snapshot(self, directory: str) -> None:
+        """Persist every matrix's serving state (quiesce first: pending
+        queue entries and live slots are NOT snapshotted)."""
+        from repro.core.solver_ckpt import save_service_snapshot
+
+        if self._queue or self._live:
+            raise RuntimeError(
+                "snapshot requires a quiesced service (drain with "
+                "run_until_done() first); "
+                f"{len(self._queue)} queued / {len(self._live)} live")
+        meta = {"slots": self.slots, "ticks": self.ticks,
+                "drift_probes": self.drift_probes,
+                "drift_scale": self.drift_scale,
+                "stats": dict(self.stats), "matrices": {}}
+        matrices: dict[str, dict[str, BlockMatrix]] = {}
+        for mid, st in self._matrices.items():
+            meta["matrices"][mid] = {
+                "placement": st.placement, "block_size": st.block_size,
+                "leaf_solver": st.leaf_solver, "engine": st.engine,
+                "plan": st.plan.to_dict(), "n": st.n,
+                "dtype": jnp.dtype(st.dtype).name,
+                "drift": {"tolerance": st.drift.tolerance,
+                          "update_rank": st.drift.update_rank,
+                          "updates": st.drift.updates,
+                          "residual_est": st.drift.residual_est},
+                "smw_spent_s": st.smw_spent_s,
+                "smw_applied": st.smw_applied, "refactors": st.refactors,
+            }
+            if st.placement == "sharded":
+                pair = {"a": st.a.to_blockmatrix(),
+                        "inv": st.inv.to_blockmatrix()}
+            else:
+                pair = {"a": BlockMatrix.from_dense(st.a, st.block_size),
+                        "inv": BlockMatrix.from_dense(st.inv, st.block_size)}
+            matrices[mid] = pair
+        save_service_snapshot(directory, meta=meta, matrices=matrices)
+
+    @classmethod
+    def restore(cls, directory: str, *, policy=None, seed: int = 0
+                ) -> "SpinService":
+        """Rebuild a service from `snapshot()` output. The maintained
+        inverse is reloaded, NOT recomputed — a restart costs I/O, never a
+        re-factorization — and resumed serving is bit-identical."""
+        from repro.core.solver_ckpt import load_service_snapshot
+        from repro.parallel.sharded_blockmatrix import ShardedBlockMatrix
+        from repro.planner.plan import Plan
+
+        meta, matrices = load_service_snapshot(directory)
+        svc = cls(slots=meta["slots"], policy=policy,
+                  drift_probes=meta["drift_probes"],
+                  drift_scale=meta["drift_scale"], seed=seed)
+        svc.stats.update(meta.get("stats", {}))
+        svc.ticks = meta.get("ticks", 0)
+        for mid, m in meta["matrices"].items():
+            pair = matrices[mid]
+            if m["placement"] == "sharded":
+                a = ShardedBlockMatrix.from_blockmatrix(pair["a"])
+                inv = ShardedBlockMatrix.from_blockmatrix(pair["inv"])
+            else:
+                a, inv = pair["a"].to_dense(), pair["inv"].to_dense()
+            drift = DriftTracker(**m["drift"])
+            svc._matrices[mid] = MatrixState(
+                matrix_id=mid, a=a, inv=inv, placement=m["placement"],
+                block_size=m["block_size"], leaf_solver=m["leaf_solver"],
+                engine=m["engine"], plan=Plan.from_dict(m["plan"]),
+                drift=drift, n=m["n"], dtype=jnp.dtype(m["dtype"]),
+                smw_spent_s=m["smw_spent_s"],
+                smw_applied=m["smw_applied"], refactors=m["refactors"])
+        return svc

@@ -1,5 +1,8 @@
-"""Fault-tolerant solver tests: kill mid-inversion, resume, verify."""
+"""Fault-tolerant solver tests: kill mid-inversion, resume, verify — plus
+round-trips of the online-service snapshot format (save/load_service_
+snapshot, riding matrix_io's atomic block writes)."""
 
+import os
 import tempfile
 
 import jax
@@ -7,7 +10,8 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import BlockMatrix
-from repro.core.solver_ckpt import CheckpointedSpin
+from repro.core.solver_ckpt import (CheckpointedSpin, load_service_snapshot,
+                                    save_service_snapshot)
 from repro.core.testing import make_spd
 
 
@@ -68,3 +72,103 @@ def test_min_grid_limits_io():
         assert 0 < len(files) <= 10
         resid = jnp.linalg.norm(inv.to_dense() @ a - jnp.eye(128)) / 128 ** 0.5
         assert float(resid) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# Online-service snapshots
+# ---------------------------------------------------------------------------
+
+
+def test_service_snapshot_roundtrip_multi_matrix_and_dtypes():
+    """meta + named BlockMatrix pairs (incl. bf16) round-trip exactly."""
+    a = make_spd(128, jax.random.PRNGKey(0))
+    inv = jnp.linalg.inv(a)
+    b16 = make_spd(64, jax.random.PRNGKey(1)).astype(jnp.bfloat16)
+    meta = {"slots": 4, "matrices": {"m": {"placement": "dense"},
+                                     "w": {"placement": "dense"}}}
+    matrices = {
+        "m": {"a": BlockMatrix.from_dense(a, 32),
+              "inv": BlockMatrix.from_dense(inv, 32)},
+        "w": {"a": BlockMatrix.from_dense(b16, 32)},
+    }
+    with tempfile.TemporaryDirectory() as d:
+        save_service_snapshot(d, meta=meta, matrices=matrices)
+        meta2, back = load_service_snapshot(d)
+        assert meta2 == meta
+        assert sorted(back) == ["m", "w"]
+        assert bool((back["m"]["a"].blocks == matrices["m"]["a"].blocks)
+                    .all())
+        assert bool((back["m"]["inv"].blocks
+                     == matrices["m"]["inv"].blocks).all())
+        assert back["w"]["a"].dtype == jnp.bfloat16
+        assert bool((back["w"]["a"].blocks.astype(jnp.float32)
+                     == matrices["w"]["a"].blocks.astype(jnp.float32))
+                    .all())
+
+
+def test_service_snapshot_rejects_bad_inputs():
+    bm = BlockMatrix.from_dense(make_spd(64, jax.random.PRNGKey(4)), 32)
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(TypeError):
+            save_service_snapshot(d, meta={},
+                                  matrices={"m": {"a": jnp.zeros((4, 4))}})
+        # ids that would collide ("m__a"/"inv" vs "m"/"a__inv") or escape
+        # the snapshot dir are rejected before anything is written
+        for bad in ("m__a", "m/x", "..", ""):
+            with pytest.raises(ValueError):
+                save_service_snapshot(d, meta={}, matrices={bad: {"a": bm}})
+        with pytest.raises(ValueError):
+            save_service_snapshot(d, meta={}, matrices={"m": {"a__inv": bm}})
+        # torn snapshot: blocks written but meta.json absent -> loud error
+        with pytest.raises(FileNotFoundError):
+            load_service_snapshot(d)
+
+
+def test_service_snapshot_version_gate():
+    import json
+
+    bm = BlockMatrix.from_dense(make_spd(64, jax.random.PRNGKey(2)), 32)
+    with tempfile.TemporaryDirectory() as d:
+        save_service_snapshot(d, meta={}, matrices={"m": {"a": bm}})
+        p = os.path.join(d, "meta.json")
+        with open(p) as f:
+            payload = json.load(f)
+        payload["version"] = 999
+        with open(p, "w") as f:
+            json.dump(payload, f)
+        with pytest.raises(ValueError):
+            load_service_snapshot(d)
+
+
+def test_service_snapshot_blocks_load_elastically():
+    """The per-matrix dirs are plain matrix_io layouts, so a snapshot
+    written on one host topology reads back row-partially on another."""
+    import json
+
+    from repro.core.matrix_io import load_blockmatrix
+
+    bm = BlockMatrix.from_dense(make_spd(128, jax.random.PRNGKey(3)), 32)
+    with tempfile.TemporaryDirectory() as d:
+        save_service_snapshot(d, meta={}, matrices={"m": {"inv": bm}})
+        with open(os.path.join(d, "meta.json")) as f:
+            blocks_dir = json.load(f)["blocks_dir"]
+        sub = os.path.join(d, blocks_dir, "m__inv")
+        part = load_blockmatrix(sub, host_index=1, n_hosts=2, full=False)
+        assert bool((part.blocks[2:] == bm.blocks[2:]).all())
+        assert float(jnp.abs(part.blocks[:2]).max()) == 0.0
+
+
+def test_service_snapshot_overwrite_is_crash_safe():
+    """Re-snapshotting the same directory never mixes old and new blocks:
+    each save gets a fresh nonce'd blocks dir, meta.json swings atomically,
+    and superseded nonce dirs are garbage-collected."""
+    a1 = BlockMatrix.from_dense(make_spd(64, jax.random.PRNGKey(5)), 32)
+    a2 = BlockMatrix.from_dense(make_spd(64, jax.random.PRNGKey(6)), 32)
+    with tempfile.TemporaryDirectory() as d:
+        save_service_snapshot(d, meta={"gen": 1}, matrices={"m": {"a": a1}})
+        save_service_snapshot(d, meta={"gen": 2}, matrices={"m": {"a": a2}})
+        meta, back = load_service_snapshot(d)
+        assert meta == {"gen": 2}
+        assert bool((back["m"]["a"].blocks == a2.blocks).all())
+        nonce_dirs = [e for e in os.listdir(d) if e.startswith("blocks-")]
+        assert len(nonce_dirs) == 1            # the old one was GC'd
