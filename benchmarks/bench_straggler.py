@@ -1,0 +1,119 @@
+"""Straggler-robustness benchmark: coded completion time + degraded serving
+(DESIGN.md §10).
+
+Two measurement families:
+
+  * ``coded/delayX`` — wall time and residual of `parallel.coded_inverse`
+    (w=4 workers, s=1 Vandermonde redundancy) with one worker scripted to
+    run X× the fault-free median shard time late, X ∈ {0, 2, 10}. The
+    headline property: wall time stays near the fault-free point instead
+    of tracking the injected delay, because the decodable quorum returns
+    without the straggler.
+  * ``serve/degraded`` — requests/sec and reported probe residual of a
+    `SpinService` whose shard is hung past its solve deadline: every
+    request is answered from the sketched approximate inverse (none
+    dropped), bounded by the DriftTracker tolerance.
+
+Standalone usage (the shared `--reduced --json` convention of common.py):
+
+    PYTHONPATH=src python -m benchmarks.bench_straggler --reduced \
+        --json BENCH_straggler.json
+"""
+
+from __future__ import annotations
+
+import time
+
+from .common import bench_arg_parser, csv_row, emit_header, write_json_report
+
+N = 1024
+WORKERS = 4
+REQUESTS = 16
+DELAY_FACTORS = (0.0, 2.0, 10.0)
+
+REDUCED_N = 256
+REDUCED_REQUESTS = 8
+
+
+def run(emit, *, n: int = N, requests: int = REQUESTS,
+        json_path: str | None = None) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import testing
+    from repro.core.verify import residual_tolerance
+    from repro.parallel.straggler import (CodedConfig, FaultPlan,
+                                          coded_inverse)
+    from repro.serving import SpinService
+
+    a = testing.make_spd(n, jax.random.PRNGKey(n))
+    eye = jnp.eye(n, dtype=a.dtype)
+    cfg = CodedConfig(workers=WORKERS, redundancy=1)
+    points = []
+
+    # -- coded completion vs injected delay ---------------------------------
+    coded_inverse(a, cfg, fault_plan=FaultPlan())      # compile + warm
+    _, base = coded_inverse(a, cfg, fault_plan=FaultPlan())
+    median = base.median_shard_s or 0.0
+    for factor in DELAY_FACTORS:
+        delay = factor * median
+        plan = FaultPlan()
+        if delay > 0:
+            plan.inject_straggler(WORKERS - 1, delay)
+        t0 = time.perf_counter()
+        inv, rep = coded_inverse(a, cfg, fault_plan=plan)
+        wall = time.perf_counter() - t0
+        resid = float(jnp.abs(a @ inv - eye).max())
+        points.append({
+            "id": f"coded/delay{factor:g}/n{n}", "n": n,
+            "workers": WORKERS, "redundancy": 1,
+            "delay_factor": factor, "delay_s": delay,
+            "median_shard_s": median, "seconds": wall,
+            "residual": resid, "used_ranks": rep.used_ranks})
+        emit(csv_row(f"coded/delay{factor:g}/n{n}", wall,
+                     f"residual={resid:.2e};used={rep.used_ranks}"))
+
+    # -- degraded-mode serving under a hung shard ---------------------------
+    hung = FaultPlan().inject_straggler(0, 3600.0)
+    svc = SpinService(slots=8, solve_deadline_s=0.05, fault_plan=hung)
+    st = svc.add_matrix("bench", a)
+    panels = [jax.random.normal(jax.random.PRNGKey(1000 + i), (n,))
+              for i in range(requests)]
+    t0 = time.perf_counter()
+    reqs = [svc.solve("bench", p) for p in panels]
+    svc.run_until_done()
+    jax.block_until_ready(reqs[-1].x)
+    dt = time.perf_counter() - t0
+    assert all(r.done and r.path == "degraded" for r in reqs)
+    residual_est = max(r.residual_est for r in reqs)
+    points.append({
+        "id": f"serve/degraded/n{n}", "n": n, "requests": requests,
+        "seconds": dt, "req_per_s": requests / dt,
+        "residual_est": residual_est,
+        "bound": st.drift.tolerance,
+        "degraded_serves": svc.stats["degraded_serves"],
+        "shard_timeouts": svc.stats["shard_timeouts"]})
+    emit(csv_row(f"serve/degraded/n{n}", dt / requests,
+                 f"req_per_s={requests / dt:.1f};"
+                 f"residual_est={residual_est:.2e}"))
+
+    report = {"benchmark": "straggler", "backend": jax.default_backend(),
+              "n": n, "workers": WORKERS,
+              "residual_tolerance": residual_tolerance(a.dtype),
+              "points": points}
+    write_json_report(report, json_path, emit, "straggler")
+    return report
+
+
+def main() -> None:
+    args = bench_arg_parser(__doc__).parse_args()
+    emit_header()
+    if args.reduced:
+        run(print, n=REDUCED_N, requests=REDUCED_REQUESTS,
+            json_path=args.json)
+    else:
+        run(print, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -6,7 +6,8 @@ from .multiply import multiply, multiply_engine
 from .spin import (spin_inverse, spin_inverse_dense, spin_inverse_sharded,
                    leaf_inverse)
 from .solve import (spin_solve, spin_solve_dense, spin_solve_sharded,
-                    spin_inverse_batched, solve_grid_for)
+                    spin_inverse_batched, solve_grid_for,
+                    SketchedInverse, sketched_approx_inverse)
 from .lu_inverse import lu_inverse, lu_inverse_dense, block_lu
 from .newton_schulz import newton_schulz_polish, residual_norm
 from .solver_ckpt import CheckpointedSpin
@@ -23,6 +24,7 @@ __all__ = [
     "leaf_inverse",
     "spin_solve", "spin_solve_dense", "spin_solve_sharded",
     "spin_inverse_batched", "solve_grid_for",
+    "SketchedInverse", "sketched_approx_inverse",
     "lu_inverse", "lu_inverse_dense", "block_lu",
     "newton_schulz_polish", "residual_norm", "CheckpointedSpin",
     "smw_update_inverse", "smw_update_solve", "block_update_factors",

@@ -26,6 +26,7 @@ import numpy as np
 __all__ = [
     "CostParams", "spin_cost", "lu_cost", "spin_schedule",
     "tpu_roofline_cost", "fit_scale", "DTYPE_BYTES",
+    "coded_work_multiplier", "coded_completion_cost", "plan_redundancy",
 ]
 
 # Storage bytes per element, shared by every consumer that turns a dtype
@@ -161,6 +162,76 @@ def spin_schedule(n: int, block_size: int) -> list[dict]:
     out.append(dict(level=m, nodes=b, grid=1, sub_n=block_size,
                     leaf_inversions=1))
     return out
+
+
+# ---------------------------------------------------------------------------
+# Coded-redundancy pricing (DESIGN.md §10): work overhead vs straggler risk
+# ---------------------------------------------------------------------------
+
+
+def coded_work_multiplier(workers: int, redundancy: int,
+                          scheme: str = "vandermonde") -> float:
+    """Per-worker work overhead of tolerating s of w lost/overdue workers.
+
+    vandermonde (MDS erasure coding): each worker solves one coded panel of
+    n/(w−s) columns instead of n/w → ×w/(w−s). replication: each worker
+    solves its own shard plus s cyclic backups → ×(s+1). Erasure coding is
+    strictly cheaper for s ≥ 1, which is why it is the default scheme; the
+    decode is a k×k solve on the code dimension, negligible next to the
+    panel solves it amortizes over.
+    """
+    if not 0 <= redundancy < workers:
+        raise ValueError(
+            f"redundancy must be in [0, workers), got s={redundancy} "
+            f"w={workers}")
+    if scheme == "vandermonde":
+        return workers / (workers - redundancy)
+    if scheme == "replication":
+        return float(redundancy + 1)
+    raise ValueError(f"unknown coding scheme {scheme!r}")
+
+
+def _binom_tail(w: int, s: int, p: float) -> float:
+    """P[X > s] for X ~ Binomial(w, p) — the chance the redundancy budget
+    is exhausted and the run must wait on a straggler after all."""
+    return sum(math.comb(w, i) * p ** i * (1 - p) ** (w - i)
+               for i in range(s + 1, w + 1))
+
+
+def coded_completion_cost(base_shard_s: float, workers: int, redundancy: int,
+                          *, scheme: str = "vandermonde",
+                          straggler_prob: float = 0.05,
+                          straggler_slowdown: float = 10.0,
+                          decode_s: float = 0.0) -> float:
+    """Expected completion seconds of one coded fan-out.
+
+    Each worker's shard takes base_shard_s × the scheme's work multiplier;
+    when MORE than s of the w workers straggle (each independently with
+    straggler_prob, running straggler_slowdown× slow), the quorum must wait
+    on a straggler and the whole fan-out pays the slowdown. The model is
+    deliberately coarse — a binomial tail times the slowdown — because its
+    job is the planner's s decision, not wall-clock prediction.
+    """
+    work = base_shard_s * coded_work_multiplier(workers, redundancy, scheme)
+    p_blocked = _binom_tail(workers, redundancy, straggler_prob)
+    return work * (1.0 + (straggler_slowdown - 1.0) * p_blocked) + decode_s
+
+
+def plan_redundancy(workers: int, *, straggler_prob: float = 0.05,
+                    straggler_slowdown: float = 10.0,
+                    scheme: str = "vandermonde",
+                    max_redundancy: int | None = None) -> int:
+    """The s minimizing expected completion — the planner's replication
+    factor decision. s=0 when stragglers are free or absent; rises with
+    straggler_prob/slowdown until the work multiplier overtakes the tail
+    risk. Ties break toward smaller s (less redundant work)."""
+    hi = workers - 1 if max_redundancy is None else min(max_redundancy,
+                                                        workers - 1)
+    return min(range(hi + 1),
+               key=lambda s: (coded_completion_cost(
+                   1.0, workers, s, scheme=scheme,
+                   straggler_prob=straggler_prob,
+                   straggler_slowdown=straggler_slowdown), s))
 
 
 # ---------------------------------------------------------------------------

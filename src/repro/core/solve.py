@@ -28,6 +28,7 @@ needs (L, d, d) — compiling ONE program for the batch instead of L.
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import functools
 
 import jax
@@ -38,7 +39,8 @@ from .multiply import current_engine, multiply_engine
 from .spin import LEAF_SOLVERS, spin_inverse_dense
 
 __all__ = ["spin_solve", "spin_solve_dense", "spin_solve_sharded",
-           "spin_inverse_batched", "solve_grid_for"]
+           "spin_inverse_batched", "solve_grid_for",
+           "SketchedInverse", "sketched_approx_inverse"]
 
 
 def solve_grid_for(n: int, max_grid: int = 8, min_block: int = 64) -> int:
@@ -224,6 +226,85 @@ def spin_solve_sharded(a, b: jax.Array, block_size: int | None = None, *,
     a, leaf_solver, engine, _ = _resolve_sharded_config(
         "solve", a, block_size, leaf_solver, engine, auto)
     return solve_program(a, b, leaf_solver=leaf_solver, engine=engine)
+
+
+# ---------------------------------------------------------------------------
+# Degraded-mode (sketched) approximate inverse — DESIGN.md §10
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SketchedInverse:
+    """A servable approximate inverse with its reported residual bound."""
+
+    inverse: jax.Array        # dense (n, n), caller's dtype
+    residual_est: float       # probe estimate of ‖A X − I‖∞ at return
+    sweeps: int               # Newton–Schulz sweeps spent
+    converged: bool           # residual_est ≤ tol when we stopped
+
+
+def sketched_approx_inverse(a: jax.Array, key: jax.Array, *,
+                            block_size: int | None = None,
+                            tol: float | None = None, max_sweeps: int = 60,
+                            probes: int = 2) -> SketchedInverse:
+    """Approximate A⁻¹ servable before (or without) the full recursion.
+
+    The degraded-mode path of the straggler-robust layer: when too many
+    workers are lost or a shard hangs, the service must still answer with a
+    *bounded, reported* residual. Recipe (per PAPERS.md's straggler-robust
+    inverse approximation): a randomized sketch — power iteration on AᵀA
+    with a random probe — estimates σ_max, seeding X₀ = Aᵀ/(1.1·σ̂²), for
+    which ‖I − AX₀‖₂ < 1 for ANY nonsingular A; Newton–Schulz sweeps
+    (core.newton_schulz — two BlockMatrix multiplies each, inheriting the
+    active multiply engine) then polish quadratically, and the DriftTracker
+    probe machinery (core.update.estimate_inverse_residual) is re-used to
+    measure the residual after every sweep, stopping at `tol`.
+
+    tol=None uses `verify.residual_tolerance(a.dtype)`. Returns a
+    SketchedInverse whose `residual_est` is the value the serving layer
+    reports alongside degraded answers.
+    """
+    from .newton_schulz import newton_schulz_polish
+    from .update import estimate_inverse_residual
+    from .verify import residual_tolerance
+
+    n = a.shape[0]
+    dtype = a.dtype
+    if tol is None:
+        tol = residual_tolerance(dtype)
+    f32 = a.astype(jnp.float32)
+
+    # Randomized sketch of σ_max² (8 power steps on AᵀA; the 1.1 safety
+    # factor keeps α·σ_max² < 2 — the Newton–Schulz convergence condition —
+    # under mild power-iteration underestimation).
+    key, sub = jax.random.split(key)
+    v = jax.random.normal(sub, (n,), dtype=jnp.float32)
+    for _ in range(8):
+        v = f32.T @ (f32 @ v)
+        v = v / jnp.linalg.norm(v)
+    sigma2 = float(jnp.linalg.norm(f32.T @ (f32 @ v)))
+    x0 = f32.T / (1.1 * sigma2)
+
+    bs = block_size or n // solve_grid_for(n)
+    a_bm = BlockMatrix.from_dense(f32, bs)
+    x = BlockMatrix.from_dense(x0, bs)
+
+    def probe_residual(x_bm: BlockMatrix, k: jax.Array) -> float:
+        return float(estimate_inverse_residual(
+            lambda p: f32 @ p, x_bm.to_dense(), k, n,
+            probes=max(1, probes)))
+
+    key, sub = jax.random.split(key)
+    residual = probe_residual(x, sub)
+    sweeps = 0
+    while residual > tol and sweeps < max_sweeps:
+        x = newton_schulz_polish(a_bm, x, sweeps=1)
+        sweeps += 1
+        key, sub = jax.random.split(key)
+        residual = probe_residual(x, sub)
+    return SketchedInverse(inverse=x.to_dense().astype(dtype),
+                           residual_est=residual, sweeps=sweeps,
+                           converged=residual <= tol)
 
 
 def spin_inverse_batched(batch: jax.Array, block_size: int | None = None,

@@ -23,7 +23,7 @@ The whole recursion is structural (depth = log2(b) fixed at trace time), so
 `jax.jit(spin_inverse)` compiles the ENTIRE multi-level algorithm into one
 XLA program — no per-level Spark job scheduling. That is the single biggest
 behavioural difference vs the paper's runtime and is accounted for in
-DESIGN.md §10.
+DESIGN.md §11.
 """
 
 from __future__ import annotations
@@ -217,7 +217,8 @@ def _resolve_sharded_config(kind: str, a, block_size: int | None,
 
 def spin_inverse_sharded(a, block_size: int | None = None, *,
                          leaf_solver: str | None = None,
-                         engine: str | None = None, auto: bool = False):
+                         engine: str | None = None, auto: bool = False,
+                         coded=None, fault_plan=None):
     """Mesh-resident SPIN inversion: one pjit program, no inter-level gathers.
 
     The whole Algorithm-2 recursion — quadrant views, 6 multiplies,
@@ -233,8 +234,35 @@ def spin_inverse_sharded(a, block_size: int | None = None, *,
     to the dense path with the same configuration. auto=True consults the
     planner under the sharded placement; explicit block_size / leaf_solver /
     engine arguments always override the planner's choices.
+
+    coded=CodedConfig(...) routes through the straggler-robust execution
+    layer (repro.parallel.straggler): the inverse is assembled from w coded
+    worker panel-solves, any w−s of which suffice, so an overdue or failed
+    worker never stalls the inversion. `fault_plan` scripts deterministic
+    stragglers/failures for tests (None picks up the SPIN_FAULT_PLAN env
+    schedule). The coded path takes a dense (n, n) or BlockMatrix operand
+    and returns a dense inverse — it is a per-panel execution model, not
+    the single-program mesh recursion.
     """
     from repro.parallel.sharded_blockmatrix import inverse_program
+
+    if coded is not None:
+        from repro.parallel.sharded_blockmatrix import ShardedBlockMatrix
+        from repro.parallel.straggler import coded_inverse
+
+        if isinstance(a, ShardedBlockMatrix):
+            raise ValueError(
+                "coded execution assembles the inverse from worker panels "
+                "and needs a dense or BlockMatrix operand, not a "
+                "mesh-resident ShardedBlockMatrix")
+        dense = a.to_dense() if isinstance(a, BlockMatrix) else a
+        bs = block_size or (a.block_size if isinstance(a, BlockMatrix)
+                            else None)
+        inv, _ = coded_inverse(dense, coded, block_size=bs,
+                               leaf_solver=leaf_solver or "linalg",
+                               engine=engine, sharded=True,
+                               fault_plan=fault_plan)
+        return inv
 
     a, leaf_solver, engine, dense_in = _resolve_sharded_config(
         "inverse", a, block_size, leaf_solver, engine, auto)

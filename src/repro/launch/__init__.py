@@ -1,5 +1,9 @@
 # NOTE: do not import dryrun here — it sets XLA_FLAGS at import time and
 # must only be imported as __main__ (or explicitly, before jax init).
-from .mesh import make_mesh_shape, make_production_mesh
+from .mesh import (WorkerInfo, init_distributed, local_worker_ranks,
+                   make_mesh_shape, make_production_mesh, make_worker_mesh,
+                   worker_info)
 
-__all__ = ["make_mesh_shape", "make_production_mesh"]
+__all__ = ["make_mesh_shape", "make_production_mesh",
+           "WorkerInfo", "init_distributed", "worker_info",
+           "local_worker_ranks", "make_worker_mesh"]

@@ -1,4 +1,4 @@
-"""Production mesh definitions.
+"""Production mesh definitions + the multi-process (multi-host) launch path.
 
 Defined as FUNCTIONS (not module constants) so importing this module never
 touches jax device state — required because the dry-run must set
@@ -7,15 +7,31 @@ XLA_FLAGS before any jax initialization.
 Single pod: (16, 16) = 256 chips, axes (data, model) — a v5e pod.
 Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model); the `pod`
 axis is pure data parallelism over DCN (gradient all-reduce only).
+
+Multi-process: `init_distributed()` wires this process into a
+`jax.distributed` cluster (coordinator + process id taken from arguments or
+the SPIN_COORDINATOR / SPIN_NUM_PROCS / SPIN_PROC_ID env vars, matching
+how launchers pass topology), `worker_info()` reports the
+`jax.process_index()`-aware identity every worker-rank decision keys on,
+and `local_worker_ranks()` maps the straggler layer's logical coded-worker
+ranks (repro.parallel.straggler) onto processes round-robin so each host
+solves only its own coded panels. Single-process (the fake-device test
+mesh) degenerates to process 0 of 1 with every rank local — the same code
+path the chaos tests exercise deterministically.
 """
 
 from __future__ import annotations
+
+import dataclasses
+import os
 
 import jax
 
 from repro.compat import AxisType, make_mesh
 
-__all__ = ["make_production_mesh", "make_mesh_shape"]
+__all__ = ["make_production_mesh", "make_mesh_shape",
+           "WorkerInfo", "init_distributed", "worker_info",
+           "local_worker_ranks", "make_worker_mesh"]
 
 
 def make_mesh_shape(*, multi_pod: bool = False):
@@ -35,6 +51,104 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"need {n} devices for mesh {shape}, have {len(devices)}; "
             "set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
             "BEFORE importing jax (launch/dryrun.py does this)")
+    return make_mesh(shape, axes,
+                     axis_types=(AxisType.Auto,) * len(axes),
+                     devices=devices)
+
+
+# ---------------------------------------------------------------------------
+# Multi-process launch path
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerInfo:
+    """This process's identity in the (possibly single-process) cluster."""
+
+    process_index: int
+    process_count: int
+    local_device_count: int
+    global_device_count: int
+    coordinator: str | None = None
+
+    @property
+    def is_coordinator(self) -> bool:
+        return self.process_index == 0
+
+
+def worker_info(*, coordinator: str | None = None) -> WorkerInfo:
+    """`jax.process_index()`-aware worker identity (touches jax devices)."""
+    return WorkerInfo(process_index=jax.process_index(),
+                      process_count=jax.process_count(),
+                      local_device_count=len(jax.local_devices()),
+                      global_device_count=len(jax.devices()),
+                      coordinator=coordinator)
+
+
+def init_distributed(*, coordinator_address: str | None = None,
+                     num_processes: int | None = None,
+                     process_id: int | None = None,
+                     local_device_ids=None) -> WorkerInfo:
+    """Join the multi-process jax runtime; a no-op for single-process runs.
+
+    Arguments default from the env (SPIN_COORDINATOR, SPIN_NUM_PROCS,
+    SPIN_PROC_ID) so one binary serves every rank of a launcher-spawned
+    fleet. Must run before any other jax device-state access on this
+    process; single-process callers (tests, the fake-device mesh) get a
+    WorkerInfo without any distributed init.
+    """
+    coordinator = coordinator_address or os.environ.get("SPIN_COORDINATOR")
+    nprocs = num_processes if num_processes is not None else int(
+        os.environ.get("SPIN_NUM_PROCS", "1"))
+    pid = process_id if process_id is not None else int(
+        os.environ.get("SPIN_PROC_ID", "0"))
+    if coordinator and nprocs > 1:
+        jax.distributed.initialize(coordinator_address=coordinator,
+                                   num_processes=nprocs, process_id=pid,
+                                   local_device_ids=local_device_ids)
+    return worker_info(coordinator=coordinator if nprocs > 1 else None)
+
+
+def local_worker_ranks(workers: int, *, process_index: int | None = None,
+                       process_count: int | None = None) -> list[int]:
+    """Coded-worker ranks this process owns (round-robin over processes).
+
+    The straggler layer's w logical workers (repro.parallel.straggler) are
+    placed rank r → process r mod P, so redundancy groups — which are
+    cyclically adjacent ranks — straddle hosts and a lost host never takes
+    out a whole replication group. Explicit process_index/process_count
+    make the mapping a pure function for tests; None reads jax state.
+    """
+    pi = jax.process_index() if process_index is None else process_index
+    pc = jax.process_count() if process_count is None else process_count
+    if workers < 1 or pc < 1 or not 0 <= pi < pc:
+        raise ValueError(f"bad topology: workers={workers}, "
+                         f"process {pi}/{pc}")
+    return [r for r in range(workers) if r % pc == pi]
+
+
+def make_worker_mesh(shape: tuple[int, ...] | None = None,
+                     axes: tuple[str, ...] = ("data", "model"), *,
+                     devices=None):
+    """Mesh over the GLOBAL device set of a (multi-process) cluster.
+
+    shape=None factors the device count as (n/m, m) with m the largest
+    power of two ≤ √n dividing n — the squarest 2-axis mesh the topology
+    admits, matching the test harness's (2,2)/(4,2) conventions.
+    """
+    devices = list(jax.devices()) if devices is None else list(devices)
+    n = len(devices)
+    if shape is None:
+        m = 1
+        while m * 2 * m * 2 <= n and n % (m * 2) == 0:
+            m *= 2
+        shape = (n // m, m)
+    total = 1
+    for s in shape:
+        total *= s
+    if total != n:
+        raise ValueError(f"mesh shape {shape} needs {total} devices, "
+                         f"cluster has {n}")
     return make_mesh(shape, axes,
                      axis_types=(AxisType.Auto,) * len(axes),
                      devices=devices)

@@ -6,10 +6,20 @@ from .sharded_blockmatrix import (ShardedBlockMatrix, SpecRecord,
                                   panel_spec, record_specs,
                                   sharded_spin_inverse, sharded_spin_solve,
                                   solve_program)
+from .straggler import (CodedConfig, CodedLayout, CodedRunReport, FaultPlan,
+                        HeartbeatTracker, InsufficientWorkers, PoolReport,
+                        ShardTimeout, WorkerFailure, WorkerPool,
+                        coded_inverse, generator_is_mds, make_generator,
+                        retry_with_backoff, start_background)
 
 __all__ = ["DEFAULT_RULES", "ShardingRules", "logical_spec", "named_sharding",
            "shard",
            "ShardedBlockMatrix", "SpecRecord", "assert_mesh_resident",
            "grid_spec", "panel_spec", "mesh_fingerprint", "record_specs",
            "sharded_spin_inverse", "sharded_spin_solve",
-           "inverse_program", "solve_program"]
+           "inverse_program", "solve_program",
+           "CodedConfig", "CodedLayout", "CodedRunReport", "FaultPlan",
+           "HeartbeatTracker", "InsufficientWorkers", "PoolReport",
+           "ShardTimeout", "WorkerFailure", "WorkerPool", "coded_inverse",
+           "generator_is_mds", "make_generator", "retry_with_backoff",
+           "start_background"]

@@ -1,0 +1,659 @@
+"""Straggler-robust coded execution layer (DESIGN.md §10).
+
+The paper's Spark runtime gets straggler/failure tolerance for free from the
+RDD scheduler: a lost or slow partition is recomputed elsewhere. Our
+mesh-resident recursion is one pjit program — a single slow host stalls the
+whole inversion. Following "Straggler Robust Distributed Matrix Inverse
+Approximation" (PAPERS.md), this module makes the *panel* decomposition of
+the inverse the unit of fault tolerance:
+
+  * **coded redundancy** — A⁻¹ is assembled from w worker panel-solves
+    A·X_j = B_j. With the ``vandermonde`` scheme the RHS panels are MDS-coded
+    combinations of identity panels (any k = w − s results decode all data
+    panels by a small k×k solve on the code dimension — solving is linear in
+    the RHS, so coding the RHS codes the answer). With the ``replication``
+    scheme each of the w identity shards is computed by s + 1 cyclically
+    assigned workers, so any s losses leave every shard covered. Either way
+    any w − s of w workers suffice; the work overhead (w/(w−s) vs s+1) is
+    priced in `core.costmodel` so the planner can choose s and the scheme.
+  * **heartbeat / deadline tracking** — `HeartbeatTracker` records per-shard
+    start/last-beat/duration; a shard is *overdue* once it exceeds
+    deadline_factor × the median completed-shard time. `WorkerPool` runs one
+    thread per worker, retries `WorkerFailure` with exponential backoff, and
+    returns as soon as a decodable quorum is in — stragglers keep running
+    but are not waited on.
+  * **deterministic fault injection** — `FaultPlan` scripts stragglers
+    (rank → delay) and failures (rank → first failing step + count),
+    serializable through the SPIN_FAULT_PLAN env var so subprocess mesh
+    tests (tests/mesh_harness.py) inject faults without patching code.
+
+Workers here are *logical* ranks. Under multi-process JAX they map onto
+processes via `repro.launch.mesh.local_worker_ranks`; under the fake-device
+test mesh they are threads in one process, which is exactly what makes the
+chaos tests deterministic rather than live flakes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+import time
+from typing import Any, Callable, Optional, Sequence
+
+import numpy as np
+
+__all__ = [
+    "WorkerFailure", "ShardTimeout", "InsufficientWorkers",
+    "FaultPlan", "HeartbeatTracker", "retry_with_backoff",
+    "BackgroundTask", "start_background",
+    "make_generator", "generator_is_mds", "CodedLayout", "CodedConfig",
+    "WorkerPool", "PoolReport", "CodedRunReport", "coded_inverse",
+    "FAULT_PLAN_ENV",
+]
+
+FAULT_PLAN_ENV = "SPIN_FAULT_PLAN"
+
+
+class WorkerFailure(RuntimeError):
+    """A worker died mid-shard (injected by a FaultPlan, or real)."""
+
+
+class ShardTimeout(RuntimeError):
+    """A guarded shard missed its deadline (the shard keeps running)."""
+
+
+class InsufficientWorkers(RuntimeError):
+    """Fewer than the decodable quorum of workers reported results."""
+
+
+# ---------------------------------------------------------------------------
+# Deterministic fault injection
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Scripted faults: which ranks straggle (and by how much) and which
+    ranks fail (from which step, how many times). Everything is explicit and
+    seeded, so a scenario replays identically — the harness serializes plans
+    through the SPIN_FAULT_PLAN env var for subprocess mesh tests.
+
+    `apply(rank, step)` is called by the executor at the top of every attempt:
+    it sleeps the rank's injected delay, then raises `WorkerFailure` if the
+    rank is scripted to fail at this step. `check(rank, step)` is the
+    no-sleep variant for op-granular bombs (e.g. solver_ckpt's on_op hook).
+    """
+
+    stragglers: dict[int, float] = dataclasses.field(default_factory=dict)
+    failures: dict[int, dict] = dataclasses.field(default_factory=dict)
+    seed: int = 0
+
+    def __post_init__(self):
+        self._raised: dict[int, int] = {}
+        self._lock = threading.Lock()
+
+    # -- construction --------------------------------------------------------
+
+    def inject_straggler(self, rank: int, delay_s: float) -> "FaultPlan":
+        self.stragglers[int(rank)] = float(delay_s)
+        return self
+
+    def inject_failure(self, rank: int, at_level: int = 0,
+                       count: int | None = None) -> "FaultPlan":
+        """Rank starts failing at step/level `at_level`; `count=None` means
+        it stays dead (every later attempt fails), count=k injects exactly k
+        transient failures (retry then succeeds)."""
+        self.failures[int(rank)] = {"at": int(at_level),
+                                    "count": None if count is None
+                                    else int(count)}
+        return self
+
+    # -- runtime -------------------------------------------------------------
+
+    def delay_for(self, rank: int) -> float:
+        return self.stragglers.get(int(rank), 0.0)
+
+    def check(self, rank: int, step: int) -> None:
+        """Raise WorkerFailure if `rank` is scripted to fail at `step`."""
+        f = self.failures.get(int(rank))
+        if f is None or step < f["at"]:
+            return
+        with self._lock:
+            raised = self._raised.get(int(rank), 0)
+            if f["count"] is not None and raised >= f["count"]:
+                return
+            self._raised[int(rank)] = raised + 1
+        raise WorkerFailure(
+            f"injected failure: rank {rank} at step {step}")
+
+    def apply(self, rank: int, step: int = 0, *,
+              sleep: Callable[[float], None] = time.sleep) -> None:
+        delay = self.delay_for(rank)
+        if delay > 0:
+            sleep(delay)
+        self.check(rank, step)
+
+    # -- serialization (env var for subprocess harnesses) --------------------
+
+    def to_json(self) -> str:
+        return json.dumps({"seed": self.seed,
+                           "stragglers": self.stragglers,
+                           "failures": self.failures})
+
+    @classmethod
+    def from_json(cls, payload: str) -> "FaultPlan":
+        d = json.loads(payload)
+        return cls(
+            stragglers={int(k): float(v)
+                        for k, v in d.get("stragglers", {}).items()},
+            failures={int(k): {"at": int(v["at"]),
+                               "count": None if v.get("count") is None
+                               else int(v["count"])}
+                      for k, v in d.get("failures", {}).items()},
+            seed=int(d.get("seed", 0)))
+
+    def env(self) -> dict[str, str]:
+        return {FAULT_PLAN_ENV: self.to_json()}
+
+    @classmethod
+    def from_env(cls) -> Optional["FaultPlan"]:
+        payload = os.environ.get(FAULT_PLAN_ENV)
+        return cls.from_json(payload) if payload else None
+
+
+# ---------------------------------------------------------------------------
+# Heartbeats, deadlines, backoff
+# ---------------------------------------------------------------------------
+
+
+class HeartbeatTracker:
+    """Per-shard start/heartbeat/duration ledger with a median-based deadline.
+
+    A shard is `overdue` once now − start > max(floor, factor × median
+    completed-shard time); with no completions yet only the floor applies.
+    The clock is injectable so deadline logic is unit-testable without
+    real sleeps.
+    """
+
+    def __init__(self, clock: Callable[[], float] = time.monotonic):
+        self._clock = clock
+        self._lock = threading.Lock()
+        self.starts: dict[int, float] = {}
+        self.beats: dict[int, float] = {}
+        self.durations: dict[int, float] = {}
+
+    def record_start(self, shard: int) -> None:
+        with self._lock:
+            now = self._clock()
+            self.starts[shard] = now
+            self.beats[shard] = now
+
+    def heartbeat(self, shard: int) -> None:
+        with self._lock:
+            self.beats[shard] = self._clock()
+
+    def done(self, shard: int) -> None:
+        with self._lock:
+            self.beats[shard] = self._clock()
+            self.durations[shard] = self.beats[shard] - self.starts[shard]
+
+    def median(self) -> float | None:
+        with self._lock:
+            if not self.durations:
+                return None
+            return float(np.median(list(self.durations.values())))
+
+    def outstanding(self) -> list[int]:
+        with self._lock:
+            return sorted(s for s in self.starts if s not in self.durations)
+
+    def overdue(self, shard: int, *, factor: float = 10.0,
+                floor: float = 0.05) -> bool:
+        med = self.median()
+        deadline = floor if med is None else max(floor, factor * med)
+        with self._lock:
+            start = self.starts.get(shard)
+            if start is None or shard in self.durations:
+                return False
+            return self._clock() - start > deadline
+
+
+def retry_with_backoff(fn: Callable[[int], Any], *, retries: int = 2,
+                       base_s: float = 0.01, factor: float = 2.0,
+                       sleep: Callable[[float], None] = time.sleep
+                       ) -> tuple[Any, int]:
+    """Call fn(attempt); on WorkerFailure retry with exponential backoff.
+
+    Returns (result, attempts_used). The last failure propagates once the
+    retry budget is exhausted. Deterministic: backoff is a pure geometric
+    series (no jitter — the injected schedules are scripted, and on real
+    fleets the per-rank seeds of FaultPlan can decorrelate retries).
+    """
+    attempt = 0
+    while True:
+        try:
+            return fn(attempt), attempt + 1
+        except WorkerFailure:
+            if attempt >= retries:
+                raise
+            sleep(base_s * factor ** attempt)
+            attempt += 1
+
+
+class BackgroundTask:
+    """A function running on a daemon thread with a waitable result."""
+
+    def __init__(self, fn: Callable[[], Any]):
+        self._done = threading.Event()
+        self._result: Any = None
+        self._error: BaseException | None = None
+
+        def _run():
+            try:
+                self._result = fn()
+            except BaseException as e:            # marshalled to wait()
+                self._error = e
+            finally:
+                self._done.set()
+
+        self._thread = threading.Thread(target=_run, daemon=True)
+        self._thread.start()
+
+    @property
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    @property
+    def error(self) -> BaseException | None:
+        return self._error
+
+    def wait(self, timeout: float | None = None) -> Any:
+        if not self._done.wait(timeout):
+            raise ShardTimeout(f"shard missed its {timeout}s deadline")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+
+def start_background(fn: Callable[[], Any]) -> BackgroundTask:
+    return BackgroundTask(fn)
+
+
+# ---------------------------------------------------------------------------
+# Coded shard layouts: replication and Vandermonde (MDS) erasure coding
+# ---------------------------------------------------------------------------
+
+
+def make_generator(workers: int, data_shards: int) -> np.ndarray:
+    """(w, k) real Vandermonde generator on Chebyshev nodes.
+
+    Rows are [1, x_j, x_j², …] at distinct nodes x_j ∈ (−1, 1), so every
+    k×k row-submatrix is itself a Vandermonde matrix with distinct nodes —
+    invertible — giving the MDS property: any k of w coded panels decode.
+    Chebyshev spacing keeps the k×k solves well-conditioned at the small
+    w (≤ 16) this layer targets.
+    """
+    if not 0 < data_shards <= workers:
+        raise ValueError(f"need 0 < k <= w, got k={data_shards}, w={workers}")
+    nodes = np.cos(np.pi * (2 * np.arange(workers) + 1) / (2 * workers))
+    return np.vander(nodes, data_shards, increasing=True)
+
+
+def generator_is_mds(g: np.ndarray) -> bool:
+    """Exhaustively verify every k-row submatrix is invertible (test helper;
+    combinatorial — only call at the small w used in tests)."""
+    import itertools
+
+    w, k = g.shape
+    for rows in itertools.combinations(range(w), k):
+        sub = g[list(rows), :]
+        if abs(np.linalg.det(sub)) < 1e-12 * max(1.0, abs(sub).max()) ** k:
+            return False
+    return True
+
+
+@dataclasses.dataclass(frozen=True)
+class CodedLayout:
+    """How n identity columns map onto w workers' RHS panels.
+
+    vandermonde: k = w − s data shards of ceil(n/k) columns; worker j solves
+    the coded panel Σ_m G[j,m]·E_m. replication: w data shards of ceil(n/w)
+    columns; worker j solves shards {j, …, j+s mod w} concatenated (any s
+    removals leave each shard with a surviving owner, and replicas are
+    bitwise-identical because they run the same jitted program).
+    """
+
+    n: int
+    workers: int
+    redundancy: int
+    scheme: str                       # "replication" | "vandermonde"
+    generator: Optional[np.ndarray]   # (w, k), vandermonde only
+
+    @classmethod
+    def build(cls, n: int, workers: int, redundancy: int,
+              scheme: str = "vandermonde") -> "CodedLayout":
+        if scheme not in ("replication", "vandermonde"):
+            raise ValueError(f"unknown coding scheme {scheme!r}")
+        if not 0 <= redundancy < workers:
+            raise ValueError(
+                f"redundancy must be in [0, workers), got s={redundancy} "
+                f"w={workers}")
+        gen = (make_generator(workers, workers - redundancy)
+               if scheme == "vandermonde" else None)
+        return cls(n=n, workers=workers, redundancy=redundancy,
+                   scheme=scheme, generator=gen)
+
+    @property
+    def data_shards(self) -> int:
+        return (self.workers - self.redundancy
+                if self.scheme == "vandermonde" else self.workers)
+
+    @property
+    def shard_cols(self) -> int:
+        k = self.data_shards
+        return -(-self.n // k)                    # ceil(n / k)
+
+    @property
+    def quorum(self) -> int:
+        """Results needed before decode can even be attempted."""
+        return self.workers - self.redundancy
+
+    def owners(self, shard: int) -> list[int]:
+        """Workers computing data shard `shard` (replication only)."""
+        if self.scheme != "replication":
+            raise ValueError("owners() is a replication-scheme concept")
+        w, s = self.workers, self.redundancy
+        return sorted((shard - d) % w for d in range(s + 1))
+
+    def worker_shards(self, rank: int) -> list[int]:
+        if self.scheme != "replication":
+            raise ValueError("worker_shards() is a replication-scheme "
+                             "concept")
+        return [(rank + d) % self.workers for d in range(self.redundancy + 1)]
+
+    def _data_panel(self, shard: int, dtype) -> np.ndarray:
+        """Identity columns of data shard `shard`, zero-padded to shard_cols
+        (padding columns decode to A⁻¹·0 = 0 and are sliced away)."""
+        cols = self.shard_cols
+        e = np.zeros((self.n, cols), dtype=dtype)
+        lo = shard * cols
+        for c in range(cols):
+            if lo + c < self.n:
+                e[lo + c, c] = 1.0
+        return e
+
+    def worker_rhs(self, rank: int, dtype=np.float32) -> np.ndarray:
+        """The (n, cols) RHS panel worker `rank` must solve against."""
+        if self.scheme == "vandermonde":
+            acc = np.zeros((self.n, self.shard_cols), dtype=np.float64)
+            for m in range(self.data_shards):
+                acc += self.generator[rank, m] * self._data_panel(
+                    m, np.float64)
+            return acc.astype(dtype)
+        panels = [self._data_panel(s, dtype)
+                  for s in self.worker_shards(rank)]
+        return np.concatenate(panels, axis=1)
+
+    def can_decode(self, available: set[int]) -> bool:
+        if self.scheme == "vandermonde":
+            return len(available) >= self.data_shards
+        return all(any(o in available for o in self.owners(s))
+                   for s in range(self.data_shards))
+
+    def decode(self, results: dict[int, np.ndarray]) -> np.ndarray:
+        """Assemble A⁻¹ (n, n) from any decodable subset of worker panels.
+
+        Decode is deterministic: the lowest decodable ranks are used, so the
+        same fault scenario always assembles from the same subset.
+        """
+        available = set(results)
+        if not self.can_decode(available):
+            raise InsufficientWorkers(
+                f"cannot decode from ranks {sorted(available)} "
+                f"(scheme={self.scheme}, w={self.workers}, "
+                f"s={self.redundancy})")
+        cols, k = self.shard_cols, self.data_shards
+        if self.scheme == "vandermonde":
+            use = sorted(available)[:k]
+            g_sub = self.generator[use, :]                      # (k, k)
+            stacked = np.stack([np.asarray(results[r], dtype=np.float64)
+                                for r in use])                  # (k, n, c)
+            data = np.einsum("mj,jnc->mnc", np.linalg.inv(g_sub), stacked)
+            out = np.concatenate(list(data), axis=1)[:, :self.n]
+        else:
+            panels = []
+            for shard in range(k):
+                owner = min(o for o in self.owners(shard) if o in available)
+                pos = self.worker_shards(owner).index(shard)
+                block = np.asarray(results[owner])
+                panels.append(block[:, pos * cols:(pos + 1) * cols])
+            out = np.concatenate(panels, axis=1)[:, :self.n]
+        return out
+
+
+# ---------------------------------------------------------------------------
+# The worker pool
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PoolReport:
+    results: dict[int, Any]
+    errors: dict[int, BaseException]
+    stragglers: list[int]             # ranks declared overdue (still running)
+    attempts: dict[int, int]
+    wall_s: float
+    median_shard_s: float | None
+
+
+class WorkerPool:
+    """One thread per logical worker, with scripted faults, heartbeat/
+    deadline tracking, retry + exponential backoff, and early return on a
+    decodable quorum. Threads are daemons: a straggler left running never
+    blocks the caller or process exit."""
+
+    def __init__(self, workers: int, *, fault_plan: FaultPlan | None = None,
+                 deadline_factor: float = 10.0, min_deadline_s: float = 0.05,
+                 retries: int = 2, backoff_base_s: float = 0.01,
+                 poll_s: float = 0.002, overall_timeout_s: float | None = None):
+        self.workers = workers
+        self.fault_plan = fault_plan
+        self.deadline_factor = deadline_factor
+        self.min_deadline_s = min_deadline_s
+        self.retries = retries
+        self.backoff_base_s = backoff_base_s
+        self.poll_s = poll_s
+        self.overall_timeout_s = overall_timeout_s
+
+    def run(self, tasks: Sequence[Callable[[], Any]], *,
+            complete_when: Callable[[set[int]], bool] | None = None,
+            required: int | None = None) -> PoolReport:
+        """Run tasks[rank]() per rank; return once `complete_when(done
+        ranks)` holds (default: `required` results in, default all)."""
+        w = len(tasks)
+        need = w if required is None else required
+        ready = complete_when or (lambda av: len(av) >= need)
+        tracker = HeartbeatTracker()
+        lock = threading.Lock()
+        results: dict[int, Any] = {}
+        errors: dict[int, BaseException] = {}
+        attempts: dict[int, int] = {}
+        stragglers: set[int] = set()
+        t0 = time.monotonic()
+
+        def _worker(rank: int):
+            tracker.record_start(rank)
+
+            def attempt(i: int):
+                if self.fault_plan is not None:
+                    self.fault_plan.apply(rank, step=i)
+                tracker.heartbeat(rank)
+                return tasks[rank]()
+
+            try:
+                res, used = retry_with_backoff(
+                    attempt, retries=self.retries,
+                    base_s=self.backoff_base_s)
+                tracker.done(rank)
+                with lock:
+                    results[rank] = res
+                    attempts[rank] = used
+            except WorkerFailure as e:
+                with lock:
+                    errors[rank] = e
+                    attempts[rank] = self.retries + 1
+
+        threads = [threading.Thread(target=_worker, args=(r,), daemon=True)
+                   for r in range(w)]
+        for t in threads:
+            t.start()
+        while True:
+            with lock:
+                done = set(results)
+                failed = set(errors)
+            if ready(done):
+                break
+            for rank in tracker.outstanding():
+                if rank not in failed and tracker.overdue(
+                        rank, factor=self.deadline_factor,
+                        floor=self.min_deadline_s):
+                    stragglers.add(rank)
+            if len(done) + len(failed) == w:
+                raise InsufficientWorkers(
+                    f"all workers finished but quorum not met: "
+                    f"{sorted(done)} succeeded, {sorted(failed)} failed")
+            if (self.overall_timeout_s is not None
+                    and time.monotonic() - t0 > self.overall_timeout_s):
+                raise InsufficientWorkers(
+                    f"quorum not met within {self.overall_timeout_s}s: "
+                    f"{sorted(done)} succeeded, {sorted(failed)} failed")
+            time.sleep(self.poll_s)
+        with lock:
+            return PoolReport(
+                results=dict(results), errors=dict(errors),
+                stragglers=sorted(stragglers), attempts=dict(attempts),
+                wall_s=time.monotonic() - t0,
+                median_shard_s=tracker.median())
+
+
+# ---------------------------------------------------------------------------
+# Coded inversion entry point
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CodedConfig:
+    """Coded-execution knobs for spin_inverse_sharded(coded=…).
+
+    redundancy=None asks `core.costmodel.plan_redundancy` (the planner's
+    pricing of the s+1 / w/(w−s) work overhead vs the expected straggler
+    penalty) to choose s.
+    """
+
+    workers: int = 4
+    redundancy: int | None = 1
+    scheme: str = "vandermonde"
+    deadline_factor: float = 10.0
+    min_deadline_s: float = 0.05
+    retries: int = 2
+    backoff_base_s: float = 0.01
+    straggler_prob: float = 0.05
+    straggler_slowdown: float = 10.0
+
+
+@dataclasses.dataclass
+class CodedRunReport:
+    layout: CodedLayout
+    used_ranks: list[int]             # ranks whose results fed the decode
+    stragglers: list[int]
+    failed: list[int]
+    attempts: dict[int, int]
+    wall_s: float
+    median_shard_s: float | None
+
+
+def _decode_ranks(layout: CodedLayout, available: set[int]) -> list[int]:
+    if layout.scheme == "vandermonde":
+        return sorted(available)[:layout.data_shards]
+    used = set()
+    for shard in range(layout.data_shards):
+        used.add(min(o for o in layout.owners(shard) if o in available))
+    return sorted(used)
+
+
+def coded_inverse(a, config: CodedConfig | None = None, *,
+                  block_size: int | None = None,
+                  leaf_solver: str = "linalg", engine: str | None = None,
+                  sharded: bool = False,
+                  fault_plan: FaultPlan | None = None,
+                  overall_timeout_s: float | None = None):
+    """Invert dense SPD `a` by w coded panel solves; any w−s workers suffice.
+
+    Each worker solves A·X_j = B_j for its coded RHS panel through the SPIN
+    solve recursion (`spin_solve_dense`, or the mesh-resident
+    `spin_solve_sharded` when sharded=True); results decode to A⁻¹ without
+    waiting on overdue workers. Returns (inverse, CodedRunReport).
+
+    fault_plan=None picks up the SPIN_FAULT_PLAN env schedule if one is set
+    (the mesh harness's injection channel); pass an explicit FaultPlan() to
+    force fault-free execution.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.solve import spin_solve_dense, spin_solve_sharded
+
+    cfg = config or CodedConfig()
+    if fault_plan is None:
+        fault_plan = FaultPlan.from_env()
+    n = int(a.shape[0])
+    dtype = a.dtype
+    if block_size is None:
+        from repro.planner import planned_block_size
+
+        block_size = planned_block_size(n, dtype, kind="solve")
+    redundancy = cfg.redundancy
+    if redundancy is None:
+        from repro.core.costmodel import plan_redundancy
+
+        redundancy = plan_redundancy(
+            cfg.workers, straggler_prob=cfg.straggler_prob,
+            straggler_slowdown=cfg.straggler_slowdown, scheme=cfg.scheme)
+    layout = CodedLayout.build(n, cfg.workers, redundancy, cfg.scheme)
+    rhs_panels = [jnp.asarray(layout.worker_rhs(r, np.float32),
+                              dtype=dtype) for r in range(cfg.workers)]
+
+    def make_task(rank: int):
+        def task():
+            if sharded:
+                x = spin_solve_sharded(a, rhs_panels[rank], block_size,
+                                       leaf_solver=leaf_solver,
+                                       engine=engine)
+            else:
+                x = spin_solve_dense(a, rhs_panels[rank], block_size,
+                                     leaf_solver, engine=engine)
+            # synchronize INSIDE the worker: heartbeat/deadline accounting
+            # must see real compute time, not XLA's async dispatch.
+            return np.asarray(jax.block_until_ready(x))
+        return task
+
+    pool = WorkerPool(cfg.workers, fault_plan=fault_plan,
+                      deadline_factor=cfg.deadline_factor,
+                      min_deadline_s=cfg.min_deadline_s,
+                      retries=cfg.retries,
+                      backoff_base_s=cfg.backoff_base_s,
+                      overall_timeout_s=overall_timeout_s)
+    report = pool.run([make_task(r) for r in range(cfg.workers)],
+                      complete_when=layout.can_decode)
+    inv = layout.decode(report.results)   # float64 accumulator from decode
+    run = CodedRunReport(
+        layout=layout,
+        used_ranks=_decode_ranks(layout, set(report.results)),
+        stragglers=report.stragglers,
+        failed=sorted(report.errors),
+        attempts=report.attempts,
+        wall_s=report.wall_s,
+        median_shard_s=report.median_shard_s)
+    return jnp.asarray(inv, dtype=dtype), run

@@ -31,6 +31,17 @@ the maintained inverse a request-serving object:
     service re-factorizes in the background: the fresh inversion is
     DISPATCHED (XLA async) without blocking the scheduler loop, and the
     next consumer of the new inverse synchronizes on it naturally;
+  * **degraded-mode serving** — with a `solve_deadline_s`, the exact
+    recursion path runs guarded (retry with exponential backoff on
+    `WorkerFailure`, deadline via the straggler layer's background tasks).
+    A hung shard flips the matrix into degraded mode: queued solves are
+    NEVER dropped — they are answered from a sketched approximate inverse
+    (`core.solve.sketched_approx_inverse`: randomized sketch +
+    Newton–Schulz polish to within the DriftTracker tolerance, i.e.
+    drift_scale × the dtype residual tolerance) with the probe residual
+    REPORTED on each request (`SolveRequest.residual_est`). When the hung
+    shard's background work finally lands, the service re-factorizes and
+    exits degraded mode;
   * **snapshot/restore** — `snapshot()`/`SpinService.restore()` persist
     every matrix's state through `core.solver_ckpt.save_service_snapshot`
     (which rides `core.matrix_io`'s atomic per-row block writes), so a
@@ -54,12 +65,15 @@ import jax.numpy as jnp
 from repro.core.blockmatrix import BlockMatrix
 from repro.core.solver_ckpt import validate_snapshot_key as \
     _validate_snapshot_key
-from repro.core.solve import spin_solve_dense, spin_solve_sharded
+from repro.core.solve import (sketched_approx_inverse, spin_solve_dense,
+                              spin_solve_sharded)
 from repro.core.spin import spin_inverse_dense, spin_inverse_sharded
 from repro.core.update import (DriftTracker, add_low_rank, apply_inverse,
                                block_update_factors,
                                estimate_inverse_residual,
                                smw_update_inverse)
+from repro.parallel.straggler import (ShardTimeout, WorkerFailure,
+                                      retry_with_backoff, start_background)
 
 __all__ = ["SolveRequest", "UpdateRequest", "MatrixState", "SpinService"]
 
@@ -75,7 +89,8 @@ class SolveRequest:
     x: Optional[jax.Array] = None
     done: bool = False
     slot: Optional[int] = None
-    path: Optional[str] = None       # "recursion" | "maintained"
+    path: Optional[str] = None       # "recursion" | "maintained" | "degraded"
+    residual_est: Optional[float] = None   # reported on the degraded path
 
 
 @dataclasses.dataclass
@@ -114,6 +129,12 @@ class MatrixState:
     smw_spent_s: float = 0.0         # modeled SMW spend since last factorize
     smw_applied: int = 0
     refactors: int = 0
+    # straggler/degraded-mode state (DESIGN.md §10)
+    rank: int = 0                    # fault-plan rank of this matrix's shard
+    degraded: bool = False
+    sketch: object = None            # SketchedInverse, built lazily
+    background: object = None        # the hung shard's BackgroundTask
+    degraded_serves: int = 0
 
     @property
     def pending_rank(self) -> int:
@@ -125,13 +146,23 @@ class SpinService:
 
     def __init__(self, *, slots: int = 8, policy=None,
                  drift_probes: int = 2, drift_scale: float = 10.0,
-                 seed: int = 0):
+                 seed: int = 0, solve_deadline_s: float | None = None,
+                 fault_plan=None, solve_retries: int = 1,
+                 backoff_base_s: float = 0.01,
+                 degraded_max_sweeps: int = 60):
         from repro.planner import RefactorPolicy  # late: planner is optional
 
         self.slots = slots
         self.policy = policy or RefactorPolicy()
         self.drift_probes = drift_probes         # 0 disables probe estimates
         self.drift_scale = drift_scale
+        # Straggler guard: None deadline + None fault_plan keeps the exact
+        # path a direct (bitwise-identical) call — no thread, no guard.
+        self.solve_deadline_s = solve_deadline_s
+        self.fault_plan = fault_plan
+        self.solve_retries = solve_retries
+        self.backoff_base_s = backoff_base_s
+        self.degraded_max_sweeps = degraded_max_sweeps
         self._free: deque[int] = deque(range(slots))
         self._live: dict[int, SolveRequest] = {}
         self._queue: deque = deque()
@@ -140,7 +171,9 @@ class SpinService:
         self._key = jax.random.PRNGKey(seed)
         self.ticks = 0
         self.stats = {"solves": 0, "batches": 0, "coalesced_cols": 0,
-                      "updates_smw": 0, "updates_refactor": 0}
+                      "updates_smw": 0, "updates_refactor": 0,
+                      "degraded_serves": 0, "shard_timeouts": 0,
+                      "shard_failures": 0, "retries": 0, "recoveries": 0}
 
     # -- matrix admission ----------------------------------------------------
 
@@ -191,7 +224,7 @@ class SpinService:
             leaf_solver=leaf_solver or plan.leaf_solver,
             engine=engine or plan.multiply_engine, plan=plan,
             drift=DriftTracker.for_dtype(dtype, scale=self.drift_scale),
-            n=int(n), dtype=jnp.dtype(dtype))
+            n=int(n), dtype=jnp.dtype(dtype), rank=len(self._matrices))
         self._factorize(state)
         self._matrices[matrix_id] = state
         return state
@@ -317,7 +350,7 @@ class SpinService:
                       for r in reqs]
             rhs = panels[0] if len(panels) == 1 else jnp.concatenate(
                 panels, axis=1)
-            x, path = self._solve_batch(state, rhs)
+            x, path, residual = self._solve_batch(state, rhs)
             col = 0
             for req, panel in zip(reqs, panels):
                 c = panel.shape[1]
@@ -325,6 +358,7 @@ class SpinService:
                 col += c
                 req.x = out[:, 0] if req.rhs.ndim == 1 else out
                 req.path = path
+                req.residual_est = residual
                 req.done = True
                 del self._live[req.slot]
                 self._free.append(req.slot)
@@ -344,23 +378,103 @@ class SpinService:
     # -- execution -----------------------------------------------------------
 
     def _solve_batch(self, state: MatrixState, rhs: jax.Array
-                     ) -> tuple[jax.Array, str]:
+                     ) -> tuple[jax.Array, str, float | None]:
         """Serve one coalesced (n, c) panel for `state`.
 
         Zero pending churn → the planner-configured `spin_solve` entry
         point (bitwise-identical to the offline call on the same panel).
         Pending SMW churn → one panel GEMM against the maintained inverse.
+        A hung or failed shard (deadline missed / retries exhausted) flips
+        the matrix into degraded mode: the panel is answered from the
+        sketched approximate inverse with its probe residual reported,
+        and the matrix recovers when the background work lands.
         """
-        if state.pending_rank == 0:
+        if state.degraded:
+            self._poll_background(state)
+        if state.pending_rank == 0 and not state.degraded:
+            if self.solve_deadline_s is None and self.fault_plan is None:
+                return self._exact_solve(state, rhs), "recursion", None
+            task = start_background(self._guarded_solve(state, rhs))
+            try:
+                return task.wait(self.solve_deadline_s), "recursion", None
+            except ShardTimeout:
+                state.degraded = True
+                state.background = task      # still running; lands later
+                self.stats["shard_timeouts"] += 1
+            except WorkerFailure:
+                state.degraded = True
+                state.background = None      # dead, nothing to wait on
+                self.stats["shard_failures"] += 1
+        if state.degraded:
+            sketch = self._ensure_sketch(state)
+            state.degraded_serves += 1
+            self.stats["degraded_serves"] += 1
+            return (apply_inverse(sketch.inverse, rhs), "degraded",
+                    sketch.residual_est)
+        return apply_inverse(state.inv, rhs), "maintained", None
+
+    def _exact_solve(self, state: MatrixState, rhs: jax.Array) -> jax.Array:
+        if state.placement == "sharded":
+            return spin_solve_sharded(state.a, rhs,
+                                      leaf_solver=state.leaf_solver,
+                                      engine=state.engine)
+        return spin_solve_dense(state.a, rhs, state.block_size,
+                                state.leaf_solver, engine=state.engine)
+
+    def _guarded_solve(self, state: MatrixState, rhs: jax.Array):
+        """The exact solve wrapped for background execution: fault-plan
+        injection per attempt (rank = the matrix's admission index), retry
+        with exponential backoff on WorkerFailure, and synchronization
+        inside the worker so the deadline sees real compute time."""
+        def attempt(i: int) -> jax.Array:
+            if self.fault_plan is not None:
+                self.fault_plan.apply(state.rank, step=i)
+            return jax.block_until_ready(self._exact_solve(state, rhs))
+
+        def run() -> jax.Array:
+            x, used = retry_with_backoff(attempt,
+                                         retries=self.solve_retries,
+                                         base_s=self.backoff_base_s)
+            if used > 1:
+                self.stats["retries"] += used - 1
+            return x
+
+        return run
+
+    def _ensure_sketch(self, state: MatrixState):
+        """Lazily build the degraded-mode sketched inverse of the CURRENT
+        matrix (updates invalidate it), polished until the probe residual
+        is within the DriftTracker tolerance — i.e. drift_scale × the
+        dtype residual tolerance, the service's advertised degraded bound."""
+        if state.sketch is None:
+            a = state.a
             if state.placement == "sharded":
-                x = spin_solve_sharded(state.a, rhs,
-                                       leaf_solver=state.leaf_solver,
-                                       engine=state.engine)
-            else:
-                x = spin_solve_dense(state.a, rhs, state.block_size,
-                                     state.leaf_solver, engine=state.engine)
-            return x, "recursion"
-        return apply_inverse(state.inv, rhs), "maintained"
+                a = a.to_blockmatrix().to_dense()
+            self._key, sub = jax.random.split(self._key)
+            state.sketch = sketched_approx_inverse(
+                a, sub, block_size=state.block_size,
+                tol=state.drift.tolerance,
+                max_sweeps=self.degraded_max_sweeps,
+                probes=max(1, self.drift_probes))
+        return state.sketch
+
+    def _poll_background(self, state: MatrixState) -> None:
+        """Exit degraded mode once the hung shard's background work lands:
+        the recovered shard re-factorizes (async dispatch, like any
+        refactor) and subsequent solves take the exact path again. A
+        background task that DIED keeps the matrix degraded."""
+        task = state.background
+        if task is None or not task.done:
+            return
+        state.background = None
+        if task.error is not None:
+            self.stats["shard_failures"] += 1
+            return                           # still degraded, still serving
+        state.degraded = False
+        state.sketch = None
+        self._factorize(state)
+        state.refactors += 1
+        self.stats["recoveries"] += 1
 
     def _apply_update(self, req: UpdateRequest) -> None:
         state = self._matrices[req.matrix_id]
@@ -378,6 +492,7 @@ class SpinService:
             drift_tolerance=state.drift.tolerance,
             placement=state.placement)
         state.a = add_low_rank(state.a, u, v)
+        state.sketch = None          # the degraded sketch tracks CURRENT A
         if decision.refactor:
             self._factorize(state)               # background: async dispatch
             state.refactors += 1
@@ -409,6 +524,12 @@ class SpinService:
                 "snapshot requires a quiesced service (drain with "
                 "run_until_done() first); "
                 f"{len(self._queue)} queued / {len(self._live)} live")
+        pending = [mid for mid, st in self._matrices.items()
+                   if st.background is not None]
+        if pending:
+            raise RuntimeError(
+                "snapshot requires landed background work; hung-shard "
+                f"tasks still pending on {pending}")
         meta = {"slots": self.slots, "ticks": self.ticks,
                 "drift_probes": self.drift_probes,
                 "drift_scale": self.drift_scale,
@@ -466,5 +587,6 @@ class SpinService:
                 engine=m["engine"], plan=Plan.from_dict(m["plan"]),
                 drift=drift, n=m["n"], dtype=jnp.dtype(m["dtype"]),
                 smw_spent_s=m["smw_spent_s"],
-                smw_applied=m["smw_applied"], refactors=m["refactors"])
+                smw_applied=m["smw_applied"], refactors=m["refactors"],
+                rank=len(svc._matrices))
         return svc

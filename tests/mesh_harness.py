@@ -15,31 +15,112 @@ marshalling:
     objects; returns the list of emitted objects, so assertions live in the
     parent test where pytest can report them.
 
+A failing child marshals ``{"error", "traceback"}`` back through a tagged
+stdout line, so the parent's AssertionError carries the child's FULL
+traceback instead of an opaque non-zero exit.
+
+Fault injection: straggler/failure scenarios are first-class fixtures.
+``FaultInjection`` (or the ``inject_straggler(rank, delay_s)`` /
+``inject_failure(rank, at_level)`` conveniences) builds a deterministic,
+seeded schedule that serializes through the SPIN_FAULT_PLAN env var; inside
+the child, ``repro.parallel.straggler.FaultPlan.from_env()`` (the default
+of every coded entry point) picks it up — no monkeypatching, bitwise
+reproducible.
+
 The child inherits the parent environment (including the hermetic
 SPIN_PLAN_CACHE that conftest.py installs) plus PYTHONPATH=<repo>/src.
 """
 
 from __future__ import annotations
 
+import base64
 import json
 import os
 import subprocess
 import sys
 import textwrap
 
-__all__ = ["run_py", "run_mesh", "mesh_env", "REPO"]
+__all__ = ["run_py", "run_mesh", "mesh_env", "REPO",
+           "FaultInjection", "inject_straggler", "inject_failure"]
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 _TAG = "MESH_RESULT "
+_ERR_TAG = "MESH_CHILD_ERROR "
 
-_PRELUDE = f"""\
+# The child decodes its real payload from base64 and runs it under a
+# try/except that marshals {"error", "traceback"} through a tagged line —
+# a child failure must propagate its full traceback to the parent test,
+# not surface as an opaque JSON decode / exit-code assertion.
+_TEMPLATE = """\
+import base64 as _mesh_b64
 import json as _mesh_json
+import sys as _mesh_sys
+import traceback as _mesh_tb
 
 def emit_result(obj):
-    print({_TAG!r} + _mesh_json.dumps(obj), flush=True)
+    print({tag!r} + _mesh_json.dumps(obj), flush=True)
 
+_mesh_src = _mesh_b64.b64decode({payload!r}).decode("utf-8")
+try:
+    exec(compile(_mesh_src, "<mesh-child>", "exec"))
+except SystemExit:
+    raise
+except BaseException as _mesh_e:
+    print({err_tag!r} + _mesh_json.dumps(
+        {{"error": repr(_mesh_e), "traceback": _mesh_tb.format_exc()}}),
+        flush=True)
+    _mesh_sys.exit(17)
 """
+
+
+class FaultInjection:
+    """Deterministic straggler/failure schedule for subprocess mesh tests.
+
+    A thin, jax-free builder over `repro.parallel.straggler.FaultPlan`'s
+    serialized form (this module must stay importable before jax init).
+    Chainable; pass via ``run_mesh(..., faults=plan)`` or merge ``.env()``
+    into extra_env yourself.
+    """
+
+    def __init__(self, seed: int = 0):
+        self.seed = seed
+        self.stragglers: dict[int, float] = {}
+        self.failures: dict[int, dict] = {}
+
+    def inject_straggler(self, rank: int, delay_s: float) -> "FaultInjection":
+        self.stragglers[int(rank)] = float(delay_s)
+        return self
+
+    def inject_failure(self, rank: int, at_level: int = 0,
+                       count: int | None = None) -> "FaultInjection":
+        self.failures[int(rank)] = {"at": int(at_level),
+                                    "count": None if count is None
+                                    else int(count)}
+        return self
+
+    def env(self) -> dict[str, str]:
+        return {"SPIN_FAULT_PLAN": json.dumps(
+            {"seed": self.seed, "stragglers": self.stragglers,
+             "failures": self.failures})}
+
+
+def inject_straggler(rank: int, delay_s: float, *,
+                     plan: FaultInjection | None = None,
+                     seed: int = 0) -> FaultInjection:
+    """Schedule worker `rank` to run `delay_s` late (create or extend a
+    FaultInjection)."""
+    return (plan or FaultInjection(seed)).inject_straggler(rank, delay_s)
+
+
+def inject_failure(rank: int, at_level: int = 0, *,
+                   count: int | None = None,
+                   plan: FaultInjection | None = None,
+                   seed: int = 0) -> FaultInjection:
+    """Schedule worker `rank` to fail from step/level `at_level` on
+    (`count` failures; None = stays dead)."""
+    return (plan or FaultInjection(seed)).inject_failure(rank, at_level,
+                                                         count)
 
 
 def mesh_env(devices: int, extra: dict | None = None) -> dict:
@@ -52,13 +133,34 @@ def mesh_env(devices: int, extra: dict | None = None) -> dict:
     return env
 
 
+def child_error(stdout: str) -> dict | None:
+    """The child's marshalled {"error", "traceback"} payload, if it died."""
+    for line in stdout.splitlines():
+        if line.startswith(_ERR_TAG):
+            return json.loads(line[len(_ERR_TAG):])
+    return None
+
+
 def run_py(code: str, devices: int = 16, timeout: int = 420,
-           extra_env: dict | None = None) -> str:
+           extra_env: dict | None = None,
+           faults: FaultInjection | None = None) -> str:
     """Run dedented `code` on a fake `devices`-device platform; return stdout."""
-    full = _PRELUDE + textwrap.dedent(code)
+    payload = base64.b64encode(
+        textwrap.dedent(code).encode("utf-8")).decode("ascii")
+    full = _TEMPLATE.format(tag=_TAG, err_tag=_ERR_TAG, payload=payload)
+    env_extra = dict(extra_env or {})
+    if faults is not None:
+        env_extra.update(faults.env())
     out = subprocess.run([sys.executable, "-c", full],
                          capture_output=True, text=True, timeout=timeout,
-                         env=mesh_env(devices, extra_env))
+                         env=mesh_env(devices, env_extra))
+    if out.returncode != 0:
+        err = child_error(out.stdout)
+        if err is not None:
+            raise AssertionError(
+                f"[devices={devices}] child raised {err['error']}\n"
+                f"--- child traceback ---\n{err['traceback']}"
+                f"STDERR:\n{out.stderr}")
     assert out.returncode == 0, (
         f"[devices={devices}] child failed\n"
         f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}")
@@ -66,10 +168,11 @@ def run_py(code: str, devices: int = 16, timeout: int = 420,
 
 
 def run_mesh(code: str, devices: int = 16, timeout: int = 420,
-             extra_env: dict | None = None) -> list:
+             extra_env: dict | None = None,
+             faults: FaultInjection | None = None) -> list:
     """run_py + marshal back every `emit_result(obj)` the child printed."""
     stdout = run_py(code, devices=devices, timeout=timeout,
-                    extra_env=extra_env)
+                    extra_env=extra_env, faults=faults)
     results = [json.loads(line[len(_TAG):])
                for line in stdout.splitlines() if line.startswith(_TAG)]
     assert results, f"child never called emit_result(...):\n{stdout}"

@@ -60,6 +60,40 @@ def test_resume_after_crash_matches_uninterrupted():
         assert jnp.allclose(inv3.to_dense(), inv.to_dense())
 
 
+def test_resume_after_injected_worker_kill_is_bit_identical():
+    """A FaultPlan-scripted WorkerFailure mid-recursion (the straggler
+    layer's op-granular bomb riding the on_op hook): the on-disk checkpoint
+    survives the kill, the SAME plan lets the retry through (count=1 is a
+    transient fault), and the resumed inverse is BIT-identical to an
+    uninterrupted from-scratch run — not merely close."""
+    from repro.parallel.straggler import FaultPlan, WorkerFailure
+
+    a = make_spd(256, jax.random.PRNGKey(7))
+    A = BlockMatrix.from_dense(a, 32)
+    plan = FaultPlan().inject_failure(0, at_level=9, count=1)
+    step = {"n": 0}
+
+    def bomb(name):
+        plan.check(0, step["n"])                  # raises once, at op 9
+        step["n"] += 1
+
+    with tempfile.TemporaryDirectory() as d:
+        solver = CheckpointedSpin(d, on_op=bomb)
+        with pytest.raises(WorkerFailure):
+            solver.inverse(A)
+        assert solver.computed_ops >= 5           # real progress hit disk
+        # resume with the same plan: its single transient failure is spent,
+        # so the retry passes; completed ops replay from the snapshot
+        solver2 = CheckpointedSpin(d, on_op=bomb)
+        inv = solver2.inverse(A)
+        assert solver2.loaded_ops > 0
+        with tempfile.TemporaryDirectory() as d2:
+            scratch = CheckpointedSpin(d2)
+            inv_scratch = scratch.inverse(A)
+        assert solver2.computed_ops < scratch.computed_ops
+        assert bool((inv.blocks == inv_scratch.blocks).all())
+
+
 def test_min_grid_limits_io():
     a = make_spd(128, jax.random.PRNGKey(1))
     A = BlockMatrix.from_dense(a, 16)          # grid 8

@@ -1,8 +1,9 @@
 """SpinService tests: coalesced solves are bitwise the offline call,
 per-matrix FIFO barriers hold, the refactor policy exercises BOTH paths
 (SMW fold below the crossover, re-factorization above it / past the drift
-bound — including on a 4-device mesh without gathering to dense), and a
-snapshot/restore round-trip resumes bit-identically."""
+bound — including on a 4-device mesh without gathering to dense), a
+snapshot/restore round-trip resumes bit-identically, and degraded-mode
+serving under injected hung/failed shards never drops a queued solve."""
 
 import tempfile
 
@@ -14,6 +15,7 @@ from mesh_harness import run_mesh
 from repro.core import spin_solve_dense
 from repro.core.testing import make_spd
 from repro.parallel.sharded_blockmatrix import ShardedBlockMatrix
+from repro.parallel.straggler import FaultPlan
 from repro.planner import RefactorPolicy
 from repro.serving import SpinService
 
@@ -263,6 +265,119 @@ def test_sharded_state_stays_sharded_off_mesh():
     assert r1.path == "recursion" and r2.path == "maintained"
     a2 = a + u @ u.T
     assert float(jnp.max(jnp.abs(a2 @ r2.x - r2.rhs))) < 1e-3
+
+
+# -- degraded-mode serving under injected shard faults (DESIGN.md §10) -------
+
+
+def _offline(a, svc, rhs) -> jax.Array:
+    st = svc.matrix("m")
+    return spin_solve_dense(a, rhs[:, None], st.block_size, st.leaf_solver,
+                            engine=st.engine)[:, 0]
+
+
+def test_hung_shard_serves_degraded_and_never_drops():
+    """A shard hung past the solve deadline: every queued solve is still
+    answered — from the sketched approximate inverse, with the probe
+    residual reported and within the DriftTracker bound (drift_scale ×
+    the dtype residual tolerance)."""
+    plan = FaultPlan().inject_straggler(0, 30.0)     # rank 0 = matrix "m"
+    a, svc = _service(slots=2, solve_deadline_s=0.05, fault_plan=plan)
+    st = svc.matrix("m")
+    reqs = [svc.solve("m", jax.random.normal(jax.random.PRNGKey(i), (N,)))
+            for i in range(3)]                       # 3 reqs, 2 slots: 2 ticks
+    svc.run_until_done()
+    assert all(r.done for r in reqs)                 # NEVER dropped
+    assert all(r.path == "degraded" for r in reqs)
+    assert all(r.residual_est is not None
+               and r.residual_est <= st.drift.tolerance for r in reqs)
+    assert svc.stats["shard_timeouts"] == 1          # flipped once
+    assert svc.stats["degraded_serves"] == 2         # one per served batch
+    assert st.degraded and st.background is not None
+    # drain-probe check: the degraded answers actually solve the system
+    for r in reqs:
+        resid = float(jnp.max(jnp.abs(a @ r.x - r.rhs)))
+        assert resid < st.drift.tolerance * 50, resid
+    # snapshot refuses while the hung shard's work is still in flight
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(RuntimeError):
+            svc.snapshot(d)
+
+
+def test_background_landing_recovers_exact_path():
+    """When the hung shard's background work finally lands, the service
+    re-factorizes, exits degraded mode, and the next solve is bitwise the
+    offline recursion again."""
+    plan = FaultPlan().inject_straggler(0, 0.4)
+    a, svc = _service(solve_deadline_s=0.05, fault_plan=plan)
+    st = svc.matrix("m")
+    r1 = svc.solve("m", jax.random.normal(jax.random.PRNGKey(1), (N,)))
+    svc.run_until_done()
+    assert r1.path == "degraded" and st.background is not None
+    st.background.wait(30.0)                         # the straggler lands...
+    plan.stragglers.clear()                          # ...and is healthy now
+    r2 = svc.solve("m", jax.random.normal(jax.random.PRNGKey(2), (N,)))
+    svc.run_until_done()
+    assert r2.path == "recursion" and r2.residual_est is None
+    assert not st.degraded and st.sketch is None and st.background is None
+    assert st.refactors == 1 and svc.stats["recoveries"] == 1
+    assert bool((r2.x == _offline(a, svc, r2.rhs)).all())
+
+
+def test_transient_worker_failure_is_retried():
+    """One injected WorkerFailure with retry budget left: the solve lands
+    on the exact path (bitwise the offline call) after a backoff retry —
+    no degraded detour."""
+    plan = FaultPlan().inject_failure(0, at_level=0, count=1)
+    a, svc = _service(solve_deadline_s=30.0, fault_plan=plan,
+                      solve_retries=2)
+    r = svc.solve("m", jax.random.normal(jax.random.PRNGKey(3), (N,)))
+    svc.run_until_done()
+    assert r.done and r.path == "recursion"
+    assert svc.stats["retries"] >= 1
+    assert svc.stats["shard_timeouts"] == 0
+    assert not svc.matrix("m").degraded
+    assert bool((r.x == _offline(a, svc, r.rhs)).all())
+
+
+def test_dead_worker_degrades_and_keeps_serving():
+    """Retries exhausted on a permanently dead shard: the matrix flips to
+    degraded with NO background task (nothing will land), keeps serving
+    bounded answers, and — quiesced — may still snapshot."""
+    plan = FaultPlan().inject_failure(0)             # stays dead
+    a, svc = _service(solve_deadline_s=30.0, fault_plan=plan)
+    st = svc.matrix("m")
+    r1 = svc.solve("m", jax.random.normal(jax.random.PRNGKey(4), (N,)))
+    svc.run_until_done()
+    assert r1.path == "degraded" and st.background is None
+    assert svc.stats["shard_failures"] == 1
+    r2 = svc.solve("m", jax.random.normal(jax.random.PRNGKey(5), (N,)))
+    svc.run_until_done()                             # still serving later
+    assert r2.path == "degraded"
+    assert r2.residual_est <= st.drift.tolerance
+    with tempfile.TemporaryDirectory() as d:
+        svc.snapshot(d)                              # no in-flight work: ok
+
+
+def test_update_in_degraded_mode_invalidates_sketch():
+    """An update while degraded: the sketch tracks the CURRENT matrix, so
+    the next degraded solve answers for A + uuᵀ, not the stale A."""
+    plan = FaultPlan().inject_failure(0)
+    a, svc = _service(solve_deadline_s=30.0, fault_plan=plan)
+    st = svc.matrix("m")
+    svc.solve("m", jax.random.normal(jax.random.PRNGKey(6), (N,)))
+    svc.run_until_done()
+    assert st.degraded and st.sketch is not None
+    u = _rank_k(4, seed=60)
+    svc.update("m", u)
+    svc.run_until_done()
+    assert st.sketch is None                         # invalidated
+    r = svc.solve("m", jax.random.normal(jax.random.PRNGKey(7), (N,)))
+    svc.run_until_done()
+    assert r.path == "degraded"
+    a2 = a + u @ u.T
+    resid = float(jnp.max(jnp.abs(a2 @ r.x - r.rhs)))
+    assert resid < st.drift.tolerance * 50, resid
 
 
 def test_refactor_policy_both_paths_on_mesh_without_gather():

@@ -1,0 +1,414 @@
+"""Chaos-style fault-injection tests for the straggler-robust layer.
+
+Every scenario is scripted through `FaultPlan` / the harness's
+`FaultInjection` env channel — delays and failures are deterministic
+fixtures, not live flakes. Covers: the coding layer (MDS generator,
+replication cover, decode), heartbeat/deadline tracking, retry + backoff,
+the coded inversion under injected stragglers/failures (parent process and
+4/8-device subprocess meshes, sweeping the matrix zoo), the degraded-mode
+sketched inverse's residual bound, the costmodel's redundancy pricing, and
+the multi-process launch helpers.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from mesh_harness import FaultInjection, inject_failure, inject_straggler, \
+    run_mesh
+from repro.core.costmodel import (coded_completion_cost,
+                                  coded_work_multiplier, plan_redundancy)
+from repro.core.solve import sketched_approx_inverse
+from repro.core.testing import MATRIX_FAMILIES, make_spd
+from repro.core.verify import residual_tolerance
+from repro.launch.mesh import local_worker_ranks
+from repro.parallel.straggler import (CodedConfig, CodedLayout, FaultPlan,
+                                      HeartbeatTracker, InsufficientWorkers,
+                                      WorkerFailure, WorkerPool,
+                                      coded_inverse, generator_is_mds,
+                                      make_generator, retry_with_backoff)
+
+MESHES = [pytest.param(4, id="4dev"), pytest.param(8, id="8dev")]
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: deterministic, serializable fault schedules
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_roundtrips_through_env_json():
+    plan = (FaultPlan(seed=7).inject_straggler(0, 1.5)
+            .inject_failure(2, at_level=3, count=1).inject_failure(5))
+    back = FaultPlan.from_json(plan.env()["SPIN_FAULT_PLAN"])
+    assert back.seed == 7
+    assert back.stragglers == {0: 1.5}                 # int keys restored
+    assert back.failures == {2: {"at": 3, "count": 1},
+                             5: {"at": 0, "count": None}}
+    # harness-side builder serializes identically
+    fi = inject_failure(2, 3, count=1,
+                        plan=inject_straggler(0, 1.5, seed=7))
+    fi.inject_failure(5)
+    assert fi.env() == plan.env()
+
+
+def test_fault_plan_injection_semantics():
+    plan = (FaultPlan().inject_straggler(1, 0.25)
+            .inject_failure(2, at_level=1, count=1).inject_failure(3))
+    slept = []
+    plan.apply(0, 0, sleep=slept.append)               # healthy rank: no-op
+    plan.apply(1, 0, sleep=slept.append)               # straggler sleeps
+    assert slept == [0.25]
+    plan.check(2, 0)                                   # before at_level: ok
+    with pytest.raises(WorkerFailure):
+        plan.check(2, 1)                               # fails once...
+    plan.check(2, 2)                                   # ...then recovers
+    for step in range(3):                              # count=None: dead
+        with pytest.raises(WorkerFailure):
+            plan.check(3, step)
+
+
+def test_retry_with_backoff_is_exponential():
+    plan = FaultPlan().inject_failure(0, at_level=0, count=2)
+    slept = []
+    result, attempts = retry_with_backoff(
+        lambda i: (plan.check(0, i), "ok")[1],
+        retries=3, base_s=0.01, sleep=slept.append)
+    assert result == "ok" and attempts == 3
+    assert slept == [0.01, 0.02]                       # geometric series
+    dead = FaultPlan().inject_failure(0)
+    with pytest.raises(WorkerFailure):
+        retry_with_backoff(lambda i: dead.check(0, i),
+                           retries=2, sleep=slept.append)
+
+
+def test_heartbeat_tracker_median_deadline():
+    now = {"t": 0.0}
+    tr = HeartbeatTracker(clock=lambda: now["t"])
+    for shard, dur in ((0, 1.0), (1, 2.0), (2, 3.0)):
+        now["t"] = 10.0
+        tr.record_start(shard)
+        now["t"] = 10.0 + dur
+        tr.done(shard)
+    assert tr.median() == 2.0
+    now["t"] = 100.0
+    tr.record_start(7)
+    assert tr.outstanding() == [7]
+    now["t"] = 115.0                                   # 15s < 10×median
+    assert not tr.overdue(7, factor=10.0)
+    now["t"] = 121.0                                   # 21s > 20s deadline
+    assert tr.overdue(7, factor=10.0)
+    assert not tr.overdue(0, factor=10.0)              # completed: never
+
+
+# ---------------------------------------------------------------------------
+# Coding layer: MDS property, replication cover, decode correctness
+# ---------------------------------------------------------------------------
+
+
+def test_vandermonde_generator_is_mds():
+    for w, k in ((4, 3), (5, 3), (6, 4), (8, 6)):
+        assert generator_is_mds(make_generator(w, k)), (w, k)
+
+
+def test_replication_covers_any_s_losses():
+    import itertools
+
+    for w, s in ((4, 1), (6, 2)):
+        lay = CodedLayout.build(64, w, s, "replication")
+        for lost in itertools.combinations(range(w), s):
+            alive = set(range(w)) - set(lost)
+            assert lay.can_decode(alive), (w, s, lost)
+        # s+1 losses in one replication group must break coverage
+        group = set(lay.owners(0))
+        assert not lay.can_decode(set(range(w)) - group)
+
+
+def test_decode_rejects_below_quorum():
+    lay = CodedLayout.build(32, 4, 1, "vandermonde")
+    panels = {r: np.zeros((32, lay.shard_cols), np.float32)
+              for r in range(2)}                       # quorum is 3
+    with pytest.raises(InsufficientWorkers):
+        lay.decode(panels)
+
+
+# ---------------------------------------------------------------------------
+# Coded inversion (parent process, single device)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scheme", ["vandermonde", "replication"])
+def test_coded_inverse_matches_dense_fault_free(scheme):
+    a = make_spd(128, jax.random.PRNGKey(0))
+    cfg = CodedConfig(workers=4, redundancy=1, scheme=scheme)
+    inv, report = coded_inverse(a, cfg, block_size=32,
+                                fault_plan=FaultPlan())
+    tol = residual_tolerance(jnp.float32)
+    resid = float(jnp.abs(a @ inv - jnp.eye(128)).max())
+    assert resid < tol * 10
+    assert not report.failed
+    assert report.layout.quorum == 3
+
+
+def test_coded_inverse_survives_permanent_failure():
+    a = make_spd(128, jax.random.PRNGKey(1))
+    plan = FaultPlan().inject_failure(1, at_level=0)   # rank 1 stays dead
+    inv, report = coded_inverse(a, CodedConfig(workers=4, redundancy=1),
+                                block_size=32, fault_plan=plan)
+    assert 1 not in report.used_ranks
+    resid = float(jnp.abs(a @ inv - jnp.eye(128)).max())
+    assert resid < residual_tolerance(jnp.float32) * 10
+
+
+def test_coded_inverse_transient_failure_retried():
+    a = make_spd(128, jax.random.PRNGKey(2))
+    plan = FaultPlan().inject_failure(2, at_level=0, count=1)
+    cfg = CodedConfig(workers=4, redundancy=0)         # no slack: must retry
+    inv, report = coded_inverse(a, cfg, block_size=32, fault_plan=plan)
+    assert report.attempts[2] == 2                     # failed once, retried
+    resid = float(jnp.abs(a @ inv - jnp.eye(128)).max())
+    assert resid < residual_tolerance(jnp.float32) * 10
+
+
+def test_coded_inverse_insufficient_workers_raises():
+    a = make_spd(128, jax.random.PRNGKey(3))
+    plan = FaultPlan().inject_failure(0).inject_failure(1)   # 2 dead, s=1
+    with pytest.raises(InsufficientWorkers):
+        coded_inverse(a, CodedConfig(workers=4, redundancy=1, retries=0),
+                      block_size=32, fault_plan=plan)
+
+
+def test_acceptance_straggler_not_waited_on():
+    """1 of 4 workers delayed 10× the median shard time: the inversion
+    completes via coded redundancy without waiting on the straggler."""
+    a = make_spd(128, jax.random.PRNGKey(4))
+    cfg = CodedConfig(workers=4, redundancy=1)
+    # warm the jit cache, then measure the hot fault-free median shard time
+    coded_inverse(a, cfg, block_size=32, fault_plan=FaultPlan())
+    ref, base = coded_inverse(a, cfg, block_size=32, fault_plan=FaultPlan())
+    delay = max(10.0 * base.median_shard_s, 0.5)
+    plan = FaultPlan().inject_straggler(3, delay)
+    t0 = time.monotonic()
+    inv, report = coded_inverse(a, cfg, block_size=32, fault_plan=plan)
+    wall = time.monotonic() - t0
+    assert wall < delay, f"waited on the straggler: {wall:.3f}s >= {delay:.3f}s"
+    assert 3 not in report.used_ranks
+    # parity with the fault-free run: decode subsets differ, so tolerance
+    # (not bitwise) — both assemble the same A⁻¹
+    assert float(jnp.abs(inv - ref).max()) < residual_tolerance(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Degraded mode: sketched approximate inverse residual bound
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", ["spd", "diag_dominant",
+                                    "block_banded_spd"])
+def test_sketched_inverse_respects_residual_tolerance(family):
+    a = MATRIX_FAMILIES[family](128, jax.random.PRNGKey(5))
+    tol = residual_tolerance(jnp.float32)
+    sk = sketched_approx_inverse(a, jax.random.PRNGKey(6), tol=tol)
+    assert sk.converged, f"{family}: stalled at {sk.residual_est}"
+    assert sk.residual_est <= tol
+    true_resid = float(jnp.abs(a @ sk.inverse - jnp.eye(128)).max())
+    assert true_resid < tol * 10                       # probe is a lower bound
+
+
+def test_sketched_inverse_reports_nonconvergence():
+    a = make_spd(64, jax.random.PRNGKey(7))
+    sk = sketched_approx_inverse(a, jax.random.PRNGKey(8),
+                                 tol=1e-7, max_sweeps=1)
+    assert not sk.converged and sk.sweeps == 1
+    assert sk.residual_est > 1e-7                      # honest report
+
+
+# ---------------------------------------------------------------------------
+# Costmodel: redundancy pricing for the planner's replication-factor choice
+# ---------------------------------------------------------------------------
+
+
+def test_coded_work_multiplier():
+    assert coded_work_multiplier(4, 0) == 1.0
+    assert coded_work_multiplier(4, 1) == pytest.approx(4 / 3)
+    assert coded_work_multiplier(4, 1, "replication") == 2.0
+    assert coded_work_multiplier(4, 3, "replication") == 4.0
+    with pytest.raises(ValueError):
+        coded_work_multiplier(4, 4)
+
+
+def test_plan_redundancy_tracks_straggler_risk():
+    # no stragglers -> no redundant work
+    assert plan_redundancy(4, straggler_prob=0.0) == 0
+    # heavy straggling -> buy slack; monotone in risk
+    risks = [plan_redundancy(4, straggler_prob=p)
+             for p in (0.0, 0.05, 0.3)]
+    assert risks == sorted(risks) and risks[-1] >= 1
+    # pricing: under heavy stragglers, coding beats no coding
+    s = plan_redundancy(4, straggler_prob=0.3)
+    assert coded_completion_cost(1.0, 4, s, straggler_prob=0.3) < \
+        coded_completion_cost(1.0, 4, 0, straggler_prob=0.3)
+    # a slowdown of 1 makes stragglers free -> s=0
+    assert plan_redundancy(4, straggler_prob=0.5,
+                           straggler_slowdown=1.0) == 0
+
+
+# ---------------------------------------------------------------------------
+# Multi-process launch helpers
+# ---------------------------------------------------------------------------
+
+
+def test_local_worker_ranks_partition():
+    ranks = [local_worker_ranks(8, process_index=p, process_count=3)
+             for p in range(3)]
+    assert sorted(r for rs in ranks for r in rs) == list(range(8))
+    assert ranks[0] == [0, 3, 6]                       # round-robin
+    with pytest.raises(ValueError):
+        local_worker_ranks(4, process_index=3, process_count=3)
+
+
+def test_init_distributed_single_process_noop():
+    from repro.launch.mesh import init_distributed
+
+    info = init_distributed(num_processes=1)
+    assert info.process_index == 0 and info.process_count == 1
+    assert info.is_coordinator and info.coordinator is None
+    assert local_worker_ranks(4) == [0, 1, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# Chaos sweeps on 4- and 8-device meshes (subprocess, env-injected faults)
+# ---------------------------------------------------------------------------
+
+_CHAOS_CHILD = """
+import time
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.core.testing import MATRIX_FAMILIES
+from repro.core.verify import residual_tolerance
+from repro.core.solve import sketched_approx_inverse
+from repro.compat import set_mesh
+from repro.launch.mesh import make_worker_mesh
+from repro.parallel.straggler import (CodedConfig, FaultPlan,
+                                      InsufficientWorkers, coded_inverse)
+
+mesh = make_worker_mesh()
+cfg = CodedConfig(workers=4, redundancy=1, scheme={scheme!r})
+tol = residual_tolerance(jnp.float32)
+with set_mesh(mesh):
+    for i, (family, gen) in enumerate(sorted(MATRIX_FAMILIES.items())):
+        a = gen(128, jax.random.PRNGKey(i))
+        # fault-free baseline (explicit empty plan overrides the env)
+        ref, _ = coded_inverse(a, cfg, block_size=32, sharded=True,
+                               fault_plan=FaultPlan())
+        # faulted run: schedule arrives via SPIN_FAULT_PLAN (harness API)
+        inv, rep = coded_inverse(a, cfg, block_size=32, sharded=True)
+        fam_tol = tol * (100 if family == "ill_conditioned_spd" else 1)
+        # parity is relative to the inverse's own scale: different decode
+        # subsets agree to f32 accuracy, but ||A^-1|| ~ cond(A) can be huge
+        emit_result(dict(
+            family=family,
+            parity=float(jnp.abs(inv - ref).max() / jnp.abs(ref).max()),
+            resid=float(jnp.abs(a @ inv - jnp.eye(128)).max()),
+            fam_tol=fam_tol,
+            used=rep.used_ranks, failed=rep.failed))
+
+    # too many failures for the code -> degraded mode: the sketched
+    # approximate inverse still serves, residual bounded and reported
+    a = MATRIX_FAMILIES["spd"](128, jax.random.PRNGKey(9))
+    dead = FaultPlan().inject_failure(1).inject_failure(2)
+    try:
+        coded_inverse(a, CodedConfig(workers=4, redundancy=1, retries=0),
+                      block_size=32, sharded=True, fault_plan=dead)
+        degraded = None
+    except InsufficientWorkers:
+        sk = sketched_approx_inverse(a, jax.random.PRNGKey(10), tol=tol)
+        degraded = dict(residual_est=sk.residual_est,
+                        converged=bool(sk.converged),
+                        true_resid=float(jnp.abs(
+                            a @ sk.inverse - jnp.eye(128)).max()))
+    emit_result(dict(family="degraded-fallback", degraded=degraded))
+"""
+
+
+@pytest.mark.parametrize("devices", MESHES)
+@pytest.mark.parametrize("scheme", ["vandermonde", "replication"])
+def test_chaos_zoo_under_injected_faults(devices, scheme):
+    """Sweep the matrix zoo under an injected straggler + a dead worker:
+    parity with the fault-free run, and the degraded-mode fallback's
+    residual respects verify.residual_tolerance."""
+    faults = inject_failure(2, plan=inject_straggler(0, 0.3))
+    results = run_mesh(_CHAOS_CHILD.format(scheme=scheme),
+                       devices=devices, faults=faults)
+    byf = {r["family"]: r for r in results}
+    assert set(byf) == set(MATRIX_FAMILIES) | {"degraded-fallback"}
+    tol = residual_tolerance(jnp.float32)
+    for family in MATRIX_FAMILIES:
+        r = byf[family]
+        assert 2 not in r["used"], r                  # dead worker unused
+        assert r["resid"] < r["fam_tol"] * 10, r
+        if scheme == "replication":
+            assert r["parity"] == 0.0, r              # replicas are bitwise
+        else:
+            assert r["parity"] < r["fam_tol"], r
+    deg = byf["degraded-fallback"]["degraded"]
+    assert deg is not None and deg["converged"]
+    assert deg["residual_est"] <= tol
+    assert deg["true_resid"] < tol * 10
+
+
+_ACCEPTANCE_CHILD = """
+import time
+import jax, jax.numpy as jnp
+from repro.core.spin import spin_inverse_sharded
+from repro.core.testing import make_spd
+from repro.core.verify import residual_tolerance
+from repro.compat import set_mesh
+from repro.launch.mesh import make_worker_mesh
+from repro.parallel.straggler import CodedConfig, FaultPlan, coded_inverse
+
+mesh = make_worker_mesh()
+a = make_spd(128, jax.random.PRNGKey(0))
+cfg = CodedConfig(workers=4, redundancy=1)
+with set_mesh(mesh):
+    coded_inverse(a, cfg, block_size=32, sharded=True,
+                  fault_plan=FaultPlan())              # warm the jit cache
+    _, base = coded_inverse(a, cfg, block_size=32, sharded=True,
+                            fault_plan=FaultPlan())
+    delay = max(10.0 * base.median_shard_s, 0.5)
+    plan = FaultPlan().inject_straggler(3, delay)
+    t0 = time.monotonic()
+    inv = spin_inverse_sharded(a, 32, coded=cfg, fault_plan=plan)
+    wall = time.monotonic() - t0
+    resid = float(jnp.abs(a @ inv - jnp.eye(128)).max())
+emit_result(dict(wall=wall, delay=delay, resid=resid,
+                 median=base.median_shard_s,
+                 tol=residual_tolerance(jnp.float32)))
+"""
+
+
+@pytest.mark.parametrize("devices", MESHES)
+def test_acceptance_spin_inverse_sharded_coded(devices):
+    """The ISSUE's acceptance property on the mesh entry point: with 1 of 4
+    workers delayed 10× the median shard time, `spin_inverse_sharded`
+    completes via coded redundancy without waiting on the straggler."""
+    (r,) = run_mesh(_ACCEPTANCE_CHILD, devices=devices)
+    assert r["wall"] < r["delay"], r
+    assert r["resid"] < r["tol"] * 10, r
+
+
+# ---------------------------------------------------------------------------
+# Harness satellite: child failures propagate full tracebacks
+# ---------------------------------------------------------------------------
+
+
+def test_child_failure_marshals_traceback():
+    with pytest.raises(AssertionError) as exc:
+        run_mesh("raise RuntimeError('kaboom-sentinel')", devices=2,
+                 timeout=120)
+    msg = str(exc.value)
+    assert "kaboom-sentinel" in msg                    # the error itself
+    assert "Traceback (most recent call last)" in msg  # the full traceback
+    assert "<mesh-child>" in msg                       # child frames named
