@@ -17,9 +17,21 @@ from typing import Callable
 import jax
 
 __all__ = ["time_fn", "csv_row", "emit_header", "write_json_report",
-           "bench_arg_parser"]
+           "bench_arg_parser", "engine_choices"]
 
 CSV_HEADER = "name,us_per_call,derived"
+
+
+def engine_choices() -> tuple[str, ...]:
+    """The registered multiply engines, straight from the dispatch table.
+
+    Every CLI `--engine` flag derives its choices from here so a newly
+    registered engine (core.multiply._ENGINES) is immediately selectable
+    everywhere without touching each argparse definition.
+    """
+    from repro.core.multiply import _ENGINES
+
+    return tuple(_ENGINES)
 
 
 def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
@@ -59,11 +71,19 @@ def write_json_report(report: dict, json_path: str | None, emit,
     emit(f"{tag}/json,0,wrote {json_path}")
 
 
-def bench_arg_parser(doc: str | None) -> argparse.ArgumentParser:
-    """The shared standalone-main CLI: `--reduced` + `--json PATH`."""
+def bench_arg_parser(doc: str | None, *,
+                     engine_flag: bool = False) -> argparse.ArgumentParser:
+    """The shared standalone-main CLI: `--reduced` + `--json PATH`.
+
+    engine_flag=True adds `--engine` with choices derived from the live
+    dispatch table (`engine_choices()`), defaulting to None = ambient.
+    """
     ap = argparse.ArgumentParser(description=doc)
     ap.add_argument("--reduced", action="store_true",
                     help="small sizes for CI smoke-benching")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the machine-readable report JSON here")
+    if engine_flag:
+        ap.add_argument("--engine", default=None, choices=engine_choices(),
+                        help="multiply engine (default: ambient context)")
     return ap

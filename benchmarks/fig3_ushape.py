@@ -64,8 +64,8 @@ def _planner_report(n: int, measured_spin: dict[int, float], emit) -> dict:
     return report
 
 
-def run(emit, *, sizes=SIZES, splits=SPLITS, json_path: str | None = None
-        ) -> dict:
+def run(emit, *, sizes=SIZES, splits=SPLITS, json_path: str | None = None,
+        engine: str | None = None) -> dict:
     out = {}
     reports = []
     for n in sizes:
@@ -75,7 +75,8 @@ def run(emit, *, sizes=SIZES, splits=SPLITS, json_path: str | None = None
             bs = n // b
             if bs < 8 or n % b:
                 continue
-            t_spin = time_fn(lambda x: spin_inverse_dense(x, bs), a)
+            t_spin = time_fn(
+                lambda x: spin_inverse_dense(x, bs, engine=engine), a)
             measured_spin[b] = t_spin
             emit(csv_row(f"fig3/spin/n{n}/b{b}", t_spin))
             if b > 1:          # the LU baseline's recursion needs b >= 2
@@ -93,13 +94,13 @@ def run(emit, *, sizes=SIZES, splits=SPLITS, json_path: str | None = None
 
 
 def main() -> None:
-    args = bench_arg_parser(__doc__).parse_args()
+    args = bench_arg_parser(__doc__, engine_flag=True).parse_args()
     emit_header()
     if args.reduced:
         run(print, sizes=REDUCED_SIZES, splits=REDUCED_SPLITS,
-            json_path=args.json)
+            json_path=args.json, engine=args.engine)
     else:
-        run(print, json_path=args.json)
+        run(print, json_path=args.json, engine=args.engine)
 
 
 if __name__ == "__main__":

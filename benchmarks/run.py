@@ -41,26 +41,50 @@ import sys
 
 from .common import bench_arg_parser, csv_row, emit_header, write_json_report
 
-SCHEMA = 1
+SCHEMA = 2
 
-# (kind, n, grids, rhs_cols). Engines are swept for every grid > 1; b = 1
-# has no distributed multiplies, so the engine axis would measure the same
-# program repeatedly.
+# (kind, n, grids, rhs_cols[, engines]). Engines are swept for every
+# grid > 1; b = 1 has no distributed multiplies, so the engine axis would
+# measure the same program repeatedly. A 5th element restricts that
+# point's engine axis — the n=4096 points drop `pallas` because off-TPU
+# it runs in interpret mode, and at that size the sweep would measure the
+# interpreter, not the kernel.
 FULL_SWEEP = (
     ("inverse", 1024, (1, 2, 4, 8), 0),
     ("inverse", 2048, (2, 4, 8, 16), 0),
+    ("inverse", 4096, (8,), 0, ("einsum", "strassen")),
     ("solve", 1024, (2, 4, 8), 8),
 )
-# Reduced mode still uses n=1024: small points carry ±25-60% run-to-run
-# noise on shared CI cores (measured at n≤512), which no per-point
-# tolerance survives; at n=1024 every point runs ≥20 ms and the observed
-# spread drops to ×1.02-1.14 — comfortably inside the gate's ±25%. The
-# whole sweep is ~30 s of wall clock.
+# Reduced mode keeps n=1024 as its noise floor: small points carry
+# ±25-60% run-to-run noise on shared CI cores (measured at n≤512), which
+# no per-point tolerance survives; at n=1024 every point runs ≥20 ms and
+# the observed spread drops to ×1.02-1.14 — comfortably inside the gate's
+# ±25%. The n=4096 einsum-vs-strassen pair is the Strassen acceptance
+# point (the engine's measured win lives at large n by construction), so
+# reduced mode carries it too; the whole sweep is ~90 s of wall clock.
 REDUCED_SWEEP = (
     ("inverse", 1024, (1, 2, 4, 8), 0),
+    ("inverse", 4096, (8,), 0, ("einsum", "strassen")),
     ("solve", 1024, (2, 4), 8),
 )
-ENGINES = ("einsum", "pallas")
+
+
+def _default_engines() -> tuple[str, ...]:
+    """Engine axis derived from the live registry (core.multiply._ENGINES).
+
+    `allgather`/`ring` are mesh-only: off-mesh their shard_map wrapper
+    collapses to the same local einsum, so sweeping them here would
+    re-measure the einsum points under different names.
+    """
+    from repro.core.multiply import _ENGINES
+
+    return tuple(e for e in _ENGINES if e not in ("allgather", "ring"))
+
+
+# Crossover measurement (dense strassen_matmul vs one classical GEMM):
+# few iterations — this reports a crossover point, it is not a gated
+# regression surface.
+CROSSOVER_NS = (512, 1024, 2048, 4096)
 
 
 def _point(kind: str, n: int, b: int, engine: str) -> dict:
@@ -68,7 +92,7 @@ def _point(kind: str, n: int, b: int, engine: str) -> dict:
             "block_size": n // b, "engine": engine}
 
 
-def run(emit, *, sweep=FULL_SWEEP, engines=ENGINES,
+def run(emit, *, sweep=FULL_SWEEP, engines=None,
         json_path: str | None = None, reduced: bool = False,
         warmup: int = 2, iters: int = 7,
         only_ids: set | None = None) -> dict:
@@ -87,8 +111,12 @@ def run(emit, *, sweep=FULL_SWEEP, engines=ENGINES,
     # what keeps the gate's per-point ratio SHAPE stable across runs.
     # only_ids restricts the sweep to those point ids (the gate's targeted
     # re-measure of flagged points).
+    if engines is None:
+        engines = _default_engines()
     points, thunks = [], []
-    for kind, n, grids, rhs_cols in sweep:
+    for entry in sweep:
+        kind, n, grids, rhs_cols = entry[:4]
+        entry_engines = entry[4] if len(entry) > 4 else engines
         a = testing.make_spd(n, jax.random.PRNGKey(n))
         rhs = None
         if kind == "solve":
@@ -98,7 +126,7 @@ def run(emit, *, sweep=FULL_SWEEP, engines=ENGINES,
             bs = n // b
             if n % b or bs < 8:
                 continue
-            for engine in (engines if b > 1 else engines[:1]):
+            for engine in (entry_engines if b > 1 else entry_engines[:1]):
                 pt = _point(kind, n, b, engine)
                 if only_ids is not None and pt["id"] not in only_ids:
                     continue
@@ -132,8 +160,81 @@ def run(emit, *, sweep=FULL_SWEEP, engines=ENGINES,
         "reduced": reduced,
         "points": points,
     }
+    if only_ids is None:
+        # The crossover/planner sections are informational, not gated
+        # points — the targeted re-measure passes skip them.
+        report["strassen_crossover"] = measure_crossover(emit)
+        report["planner_large_n"] = planner_large_n_report(emit)
     write_json_report(report, json_path, emit, "spin")
     return report
+
+
+def measure_crossover(emit, *, ns=CROSSOVER_NS, iters: int = 3) -> dict:
+    """Dense classical-vs-Strassen multiply crossover (satellite report).
+
+    Measures `strassen_matmul` (default cutoff) against one classical
+    GEMM at each n and reports the first measured n where Strassen wins,
+    next to the cost model's predicted crossover — the calibration check
+    for `costmodel.strassen_crossover_n`.
+    """
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import costmodel
+    from repro.core.strassen import strassen_cutoff, strassen_matmul
+
+    cutoff = strassen_cutoff()
+    pts = []
+    for n in ns:
+        key = jax.random.PRNGKey(n)
+        ka, kb = jax.random.split(key)
+        a = jax.random.normal(ka, (n, n), dtype=jnp.float32)
+        b = jax.random.normal(kb, (n, n), dtype=jnp.float32)
+        classical = jax.jit(lambda x, y: jnp.matmul(x, y))
+        strassen = jax.jit(lambda x, y: strassen_matmul(x, y))
+        times = {}
+        for name, fn in (("classical", classical), ("strassen", strassen)):
+            jax.block_until_ready(fn(a, b))          # compile + warm
+            best = float("inf")
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(a, b))
+                best = min(best, time.perf_counter() - t0)
+            times[name] = best
+        ratio = times["strassen"] / times["classical"]
+        pts.append({"n": n, "classical_s": times["classical"],
+                    "strassen_s": times["strassen"], "ratio": ratio})
+        emit(csv_row(f"crossover/n{n}", times["strassen"],
+                     f"classical={times['classical'] * 1e6:.1f}us,"
+                     f"ratio={ratio:.2f}x"))
+    measured = next((p["n"] for p in pts if p["ratio"] < 1.0), None)
+    return {
+        "cutoff": cutoff,
+        "points": pts,
+        "measured_crossover_n": measured,
+        "modeled_crossover_n": costmodel.strassen_crossover_n(cutoff=cutoff),
+    }
+
+
+def planner_large_n_report(emit, *, n: int = 4096) -> dict:
+    """What `auto=True` would run at the large-n point (gated in --baseline).
+
+    Cost-model-only (n is far above MEASURE_MAX_N) and force_replan so the
+    gate exercises THIS checkout's cost model, not a stale cached plan.
+    """
+    import jax.numpy as jnp
+
+    from repro.planner import get_plan
+
+    plan = get_plan("inverse", n, jnp.float32, measure=False,
+                    force_replan=True)
+    emit(csv_row(f"planner/n{n}", plan.predicted_s or 0.0,
+                 f"engine={plan.multiply_engine},b={plan.grid(n)}"))
+    return {"n": n, "engine": plan.multiply_engine,
+            "block_size": plan.block_size, "leaf_solver": plan.leaf_solver,
+            "predicted_s": plan.predicted_s}
 
 
 # ---------------------------------------------------------------------------
@@ -275,6 +376,17 @@ def main() -> None:
                      f"{args.baseline} (see lines above; if this PR "
                      "intentionally changed point speeds, regenerate the "
                      "baseline — convention in benchmarks/run.py)")
+        # Planner-selection gate: the Strassen engine only exists if
+        # `auto=True` actually picks it where it wins. A cost-model change
+        # that silently stops selecting it at the large-n point must fail
+        # the gate, not just shift a benchmark number.
+        planned = report.get("planner_large_n", {})
+        if planned and planned.get("engine") != "strassen":
+            sys.exit("perf-gate: planner no longer selects "
+                     "engine='strassen' at the n="
+                     f"{planned.get('n')} point (picked "
+                     f"{planned.get('engine')!r}) — the large-n candidate "
+                     "enumeration or strassen_cost pricing regressed")
         print(f"perf-gate: OK vs {args.baseline}")
 
 

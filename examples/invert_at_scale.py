@@ -26,11 +26,13 @@ def main() -> None:
     ap.add_argument("--n", type=int, default=2048)
     ap.add_argument("--block", type=int, default=None,
                     help="block size override (default: planner auto-tunes)")
-    ap.add_argument("--engine", default=None,
-                    choices=["einsum", "allgather", "ring", "pallas"],
+    from repro.core.multiply import _ENGINES
+
+    ap.add_argument("--engine", default=None, choices=list(_ENGINES),
                     help="multiply engine override (default: planner); "
                          "'pallas' is the fused-kernel engine (interpret "
-                         "mode off-TPU)")
+                         "mode off-TPU), 'strassen' the recursive "
+                         "7-multiply engine")
     ap.add_argument("--sharded", action="store_true",
                     help="mesh-resident recursion (spin_inverse_sharded): "
                          "every level's quadrants stay sharded over the "

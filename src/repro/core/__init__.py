@@ -2,7 +2,9 @@
 Strassen matrix inversion (SPIN) + the LU baseline, on JAX meshes."""
 
 from .blockmatrix import BlockMatrix, OpCounts, count_ops, block_sharding
-from .multiply import multiply, multiply_engine
+from .multiply import multiply, multiply_engine, validate_engine
+from .strassen import (strassen_cutoff, strassen_matmul,
+                       strassen_matmul_blocks)
 from .spin import (spin_inverse, spin_inverse_dense, spin_inverse_sharded,
                    leaf_inverse)
 from .solve import (spin_solve, spin_solve_dense, spin_solve_sharded,
@@ -19,7 +21,8 @@ from . import costmodel, testing, verify
 
 __all__ = [
     "BlockMatrix", "OpCounts", "count_ops", "block_sharding",
-    "multiply", "multiply_engine",
+    "multiply", "multiply_engine", "validate_engine",
+    "strassen_cutoff", "strassen_matmul", "strassen_matmul_blocks",
     "spin_inverse", "spin_inverse_dense", "spin_inverse_sharded",
     "leaf_inverse",
     "spin_solve", "spin_solve_dense", "spin_solve_sharded",

@@ -51,6 +51,10 @@ class OpCounts:
     smw_updates: int = 0         # Woodbury rank-k inverse revisions (update)
     arranges: int = 0
     splits: int = 0
+    # Strassen-engine internals (engine="strassen" only; the engine-blind
+    # counters above still book each Strassen product as ONE multiply):
+    strassen_base_multiplies: int = 0   # classical leaves of the recursion
+    strassen_adds: int = 0              # quadrant add/sub passes (18/level)
 
     def as_dict(self) -> dict[str, int]:
         return dataclasses.asdict(self)

@@ -27,6 +27,8 @@ __all__ = [
     "CostParams", "spin_cost", "lu_cost", "spin_schedule",
     "tpu_roofline_cost", "fit_scale", "DTYPE_BYTES",
     "coded_work_multiplier", "coded_completion_cost", "plan_redundancy",
+    "STRASSEN_CUTOFF", "strassen_multiply_counts", "strassen_cost",
+    "strassen_crossover_n",
 ]
 
 # Storage bytes per element, shared by every consumer that turns a dtype
@@ -102,6 +104,80 @@ def spin_cost(p: CostParams) -> dict[str, float]:
 
     c["total"] = sum(c.values())
     return c
+
+
+# ---------------------------------------------------------------------------
+# Strassen (Stark) pricing: 7 multiplies + 18 add passes per split level
+# ---------------------------------------------------------------------------
+
+# Operand dimension at/below which the Strassen recursion goes classical.
+# Single source of truth for both the executed recursion
+# (core.strassen.strassen_cutoff, env-overridable) and the planner's
+# pricing, so the modeled and executed recursions agree by construction.
+STRASSEN_CUTOFF = 512
+
+
+def strassen_multiply_counts(n: float, cutoff: int = STRASSEN_CUTOFF
+                             ) -> tuple[float, float]:
+    """(classical-equivalent MACs, add/sub elements) of ONE Strassen multiply.
+
+    Each split level of dimension n performs 7 recursive multiplies of
+    dimension ceil(n/2) (odd n pads to the next even split) plus 18
+    quadrant add/sub passes of (n/2)² elements each — the n^log2(7)
+    recurrence. At/below the cutoff the multiply is classical: n³ MACs,
+    no add passes.
+    """
+    if n <= max(cutoff, 1):
+        return float(n) ** 3, 0.0
+    half = math.ceil(n / 2)
+    macs, adds = strassen_multiply_counts(half, cutoff)
+    return 7 * macs, 18 * float(half) ** 2 + 7 * adds
+
+
+def strassen_cost(p: CostParams, *, cutoff: int = STRASSEN_CUTOFF,
+                  add_weight: float = 3.0) -> dict[str, float]:
+    """`spin_cost` with each of the 6 multiplies per level run by Strassen.
+
+    The multiply term swaps the classical (sub_n/2)³ MACs for the Strassen
+    recurrence's 7-multiply count; the 18 add passes per split level are
+    the calibrated crossover term — each streams 2 operand reads + 1 result
+    write per element (add_weight=3), charged at the subtract class's
+    t_elem rate, which is what keeps Strassen from being modeled as a win
+    at small n. Every other cost class is engine-blind and unchanged.
+    """
+    c = spin_cost(p)
+    n, cores = p.n, p.cores
+    mult = 0.0
+    for i in range(p.levels):
+        nodes = 2 ** i
+        half_n = n // 2 ** (i + 1)
+        macs, adds = strassen_multiply_counts(half_n, cutoff)
+        pf = _pf((n / 2 ** (i + 1)) ** 2, cores)
+        mult += nodes * 6 * (macs * p.t_flop
+                             + add_weight * adds * p.t_elem) / pf
+    c["total"] += mult - c["multiply"]
+    c["multiply"] = mult
+    return c
+
+
+def strassen_crossover_n(*, cutoff: int = STRASSEN_CUTOFF,
+                         t_flop: float = 1e-9, t_elem: float = 1e-9,
+                         add_weight: float = 3.0,
+                         max_n: int = 1 << 20) -> int | None:
+    """Smallest power-of-two n where one modeled Strassen multiply beats n³.
+
+    The model's crossover point (benchmarks report the measured one next to
+    it): scans doubling n until the Strassen MAC saving outweighs the add
+    traffic. Monotone in `cutoff` — a larger cutoff defers the first split,
+    so the crossover can only move right. None if no n ≤ max_n wins.
+    """
+    n = 2
+    while n <= max_n:
+        macs, adds = strassen_multiply_counts(n, cutoff)
+        if macs * t_flop + add_weight * adds * t_elem < float(n) ** 3 * t_flop:
+            return n
+        n *= 2
+    return None
 
 
 def lu_cost(p: CostParams) -> dict[str, float]:

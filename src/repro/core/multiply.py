@@ -15,6 +15,14 @@ block's operands land on one node. On a TPU mesh we provide three engines:
                     `lax.ppermute` ring, double-buffered so the step-(t+1)
                     transfer is in flight during the step-t GEMM
                     (compute/comm overlap; beyond-paper optimization).
+  * ``strassen``  — the Stark 7-multiply engine (core/strassen.py): the
+                    grid product is computed by Strassen's recursion —
+                    7 sub-multiplies + 18 add passes per split level,
+                    n^log2(7) asymptotics — down to a crossover cutoff,
+                    where the classical leaves dispatch through the SUMMA
+                    or Pallas paths (kernels/strassen). Mesh-resident:
+                    every Strassen intermediate is re-anchored through the
+                    spec ledger.
   * ``pallas``    — the fused-kernel engine: local grid contractions run as
                     ONE tiled Pallas GEMM (`kernels/matmul`) with the whole
                     k-sum in f32 VMEM scratch, and the Schur updates of
@@ -49,8 +57,8 @@ from repro import compat
 
 from .blockmatrix import BlockMatrix, _bump
 
-__all__ = ["multiply", "multiply_engine", "current_engine", "multiply_blocks",
-           "matmul_blocks_einsum", "matmul_blocks_pallas",
+__all__ = ["multiply", "multiply_engine", "current_engine", "validate_engine",
+           "multiply_blocks", "matmul_blocks_einsum", "matmul_blocks_pallas",
            "ring_matmul_panels", "allgather_matmul_panels",
            "pallas_matmul_panels", "schur_update_blocks",
            "multiply_subtract", "subtract_multiply"]
@@ -59,12 +67,25 @@ _ENGINE: contextvars.ContextVar[str] = contextvars.ContextVar(
     "blockmatrix_multiply_engine", default="einsum"
 )
 
-_ENGINES = ("einsum", "allgather", "ring", "pallas")
+_ENGINES = ("einsum", "allgather", "ring", "pallas", "strassen")
+
+
+def validate_engine(engine: str | None) -> str | None:
+    """Boundary check for `engine=` arguments: raise a clear ValueError HERE.
+
+    Entry points call this before any jit/trace work so an unknown engine
+    string fails at the API boundary with the registry in the message,
+    instead of surfacing as a deep dispatch error mid-trace. None (inherit
+    the ambient engine) passes through.
+    """
+    if engine is not None and engine not in _ENGINES:
+        raise ValueError(f"unknown multiply engine {engine!r}; want {_ENGINES}")
+    return engine
 
 
 @contextlib.contextmanager
 def multiply_engine(name: str) -> Iterator[None]:
-    """Select the multiply engine ('einsum'|'allgather'|'ring'|'pallas')."""
+    """Select the multiply engine (one of `_ENGINES`)."""
     if name not in _ENGINES:
         raise ValueError(f"unknown multiply engine {name!r}; want {_ENGINES}")
     token = _ENGINE.set(name)
@@ -210,9 +231,13 @@ def multiply_blocks(a: jax.Array, b: jax.Array,
     mesh-resident `ShardedBlockMatrix.multiply`; engine=None reads the
     ambient `multiply_engine` context.
     """
-    engine = engine or _ENGINE.get()
+    engine = validate_engine(engine) or _ENGINE.get()
     if engine == "einsum":
         return matmul_blocks_einsum(a, b)
+    if engine == "strassen":
+        from .strassen import strassen_matmul_blocks  # late: recursion layer
+
+        return strassen_matmul_blocks(a, b)
     return _shard_map_multiply(a, b, engine)
 
 
@@ -225,12 +250,19 @@ def schur_update_blocks(c: jax.Array, a: jax.Array, b: jax.Array, *,
     Under the ``pallas`` engine the subtract folds into the GEMM kernel's
     f32 accumulator (one kernel, no product round-trip through HBM); for
     SUMMA placements the gathers stay and the fused kernel runs on the
-    local shard. Every other engine composes `multiply_blocks` with the
-    elementwise subtract in exactly the op order the unfused recursion
-    used, so non-pallas results are bitwise identical to multiply-then-
-    subtract.
+    local shard. Under ``strassen`` the product runs the 7-multiply
+    recursion (fusing the subtract into the base kernel when the whole
+    product is one classical leaf — the Algorithm-2 V/C11 Schur updates
+    get the Strassen win directly). Every other engine composes
+    `multiply_blocks` with the elementwise subtract in exactly the op
+    order the unfused recursion used, so non-pallas results are bitwise
+    identical to multiply-then-subtract.
     """
-    engine = engine or _ENGINE.get()
+    engine = validate_engine(engine) or _ENGINE.get()
+    if engine == "strassen":
+        from .strassen import strassen_schur_update_blocks  # late import
+
+        return strassen_schur_update_blocks(c, a, b, negate_c=negate_c)
     if engine == "pallas":
         from repro.kernels.matmul import ops as mm_ops  # late: optional layer
 

@@ -35,7 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from .blockmatrix import BlockMatrix, _bump
-from .multiply import current_engine, multiply_engine
+from .multiply import current_engine, multiply_engine, validate_engine
 from .spin import LEAF_SOLVERS, spin_inverse_dense
 
 __all__ = ["spin_solve", "spin_solve_dense", "spin_solve_sharded",
@@ -197,6 +197,7 @@ def spin_solve_dense(a: jax.Array, b: jax.Array,
     the ambient `multiply_engine` context — resolved BEFORE the jit
     boundary so the concrete engine is always the static cache key.
     """
+    validate_engine(engine)
     if auto or block_size is None:
         from repro.planner import plan_solve
 
@@ -223,6 +224,7 @@ def spin_solve_sharded(a, b: jax.Array, block_size: int | None = None, *,
 
     from .spin import _resolve_sharded_config
 
+    validate_engine(engine)
     a, leaf_solver, engine, _ = _resolve_sharded_config(
         "solve", a, block_size, leaf_solver, engine, auto)
     return solve_program(a, b, leaf_solver=leaf_solver, engine=engine)
@@ -330,6 +332,7 @@ def spin_inverse_batched(batch: jax.Array, block_size: int | None = None,
     """
     if batch.ndim != 3:
         raise ValueError(f"expected (batch, n, n), got {batch.shape}")
+    validate_engine(engine)
     if block_size is None:
         from repro.planner import planned_block_size
 

@@ -37,7 +37,7 @@ import jax.numpy as jnp
 
 from .blockmatrix import BlockMatrix, _bump
 from .multiply import (multiply, multiply_engine, multiply_subtract,
-                       subtract_multiply)
+                       subtract_multiply, validate_engine)
 
 __all__ = ["spin_inverse", "spin_inverse_dense", "spin_inverse_sharded",
            "leaf_inverse", "LEAF_SOLVERS"]
@@ -170,6 +170,7 @@ def spin_inverse_dense(dense: jax.Array, block_size: int | None = None,
     the static cache key (an executable traced under one ambient engine
     must never be served under another).
     """
+    validate_engine(engine)
     if auto or block_size is None:
         from repro.planner import plan_inverse
 
@@ -246,6 +247,7 @@ def spin_inverse_sharded(a, block_size: int | None = None, *,
     """
     from repro.parallel.sharded_blockmatrix import inverse_program
 
+    validate_engine(engine)
     if coded is not None:
         from repro.parallel.sharded_blockmatrix import ShardedBlockMatrix
         from repro.parallel.straggler import coded_inverse

@@ -1,0 +1,13 @@
+"""Base-case dispatch for the Strassen engine (see ops.py).
+
+Dispatch-only package: Strassen's leaves are classical multiplies, so this
+layer routes them to the existing `kernels/matmul` Pallas kernels where
+they are compiled/legal and to the XLA engines elsewhere — there is no new
+kernel to write.
+"""
+
+from .ops import (base_matmul, base_matmul_blocks, base_schur_update,
+                  mosaic_legal, pallas_base_default)
+
+__all__ = ["base_matmul", "base_matmul_blocks", "base_schur_update",
+           "mosaic_legal", "pallas_base_default"]

@@ -9,8 +9,8 @@ shared across processes. `spin_inverse(..., auto=True)` and friends route
 through here.
 """
 
-from .plan import (Plan, ProblemSignature, candidate_grids, enumerate_plans,
-                   mesh_descriptor, signature_for)
+from .plan import (STRASSEN_MIN_N, Plan, ProblemSignature, candidate_grids,
+                   enumerate_plans, mesh_descriptor, signature_for)
 # NB: the `autotune` *function* is deliberately not re-exported — it would
 # shadow the `repro.planner.autotune` submodule attribute. Use
 # `repro.planner.autotune.autotune` (or just `get_plan`).
@@ -26,7 +26,7 @@ from .refactor_policy import (RefactorDecision, RefactorPolicy,
 
 __all__ = [
     "Plan", "ProblemSignature", "signature_for", "enumerate_plans",
-    "candidate_grids", "mesh_descriptor",
+    "candidate_grids", "mesh_descriptor", "STRASSEN_MIN_N",
     "predict_cost", "rank_plans", "measure_plan", "measure_plans",
     "LEAF_SOLVER_RATE", "ENGINE_RATE",
     "PlanCache", "default_cache", "default_cache_path", "PLAN_CACHE_VERSION",

@@ -30,8 +30,10 @@ import time
 
 import jax
 
-from repro.core.costmodel import (DTYPE_BYTES, TPU_V5E, CostParams,
-                                  fit_scale, spin_cost, tpu_roofline_cost)
+from repro.core.costmodel import (DTYPE_BYTES, STRASSEN_CUTOFF, TPU_V5E,
+                                  CostParams, fit_scale, spin_cost,
+                                  strassen_cost, strassen_multiply_counts,
+                                  tpu_roofline_cost)
 
 from .plan import Plan, ProblemSignature
 
@@ -55,12 +57,18 @@ LEAF_SOLVER_RATE: dict[str, dict[str, float]] = {
 # Relative distributed-multiply rates per backend, same convention: the
 # fused Pallas engine's GEMMs match the MXU path XLA emits on TPU (its win
 # is modeled separately as fused-update HBM traffic, see predict_cost), and
-# are interpret-emulated — never choosable — everywhere else.
+# are interpret-emulated — never choosable — everywhere else. The strassen
+# engine's win is likewise modeled structurally (its multiply term runs the
+# 7-multiply recurrence — `costmodel.strassen_cost` on CPU, a MAC credit +
+# add-traffic charge on the TPU roofline), so its rate is 1.0 everywhere:
+# its classical leaves run the same einsum/SUMMA/Pallas paths the other
+# engines use.
 ENGINE_RATE: dict[str, dict[str, float]] = {
     "einsum": {},
     "allgather": {},
     "ring": {},
     "pallas": {"tpu": 1.0, "default": 200.0},
+    "strassen": {},
 }
 
 def _leaf_rate(solver: str, backend: str) -> float:
@@ -117,10 +125,25 @@ def predict_cost(sig: ProblemSignature, plan: Plan,
         t_leaf_serial = leaf_flops / peak               # what actually runs
         total += (t_leaf_serial * _leaf_rate(plan.leaf_solver, "tpu")
                   - t_leaf_parallel)
+        # Strassen re-pricing on the roofline: credit the MAC saving of the
+        # 7-multiply recurrence vs the classical (sub_n/2)³ the roofline
+        # booked, and charge the 18 add passes per split level their HBM
+        # traffic (2 reads + 1 write per element) — the crossover term.
+        if plan.multiply_engine == "strassen":
+            for i in range(max(b.bit_length() - 1, 0)):
+                nodes, half_n = 2**i, sig.n / 2**(i + 1)
+                macs, adds = strassen_multiply_counts(half_n,
+                                                      STRASSEN_CUTOFF)
+                total += nodes * 6 * (
+                    2 * (macs - half_n**3) / (chips * peak)
+                    + 3 * adds * bytes_ / (chips * TPU_V5E["hbm_bw"]))
         sweep = 2 * 2 * sig.n**3 / (chips * peak)
     else:
         p = _cost_params(sig, b, calibration)
-        c = spin_cost(p)
+        # strassen swaps the multiply term for the 7-multiply recurrence
+        # (+ its add-pass crossover charge); every other class is shared.
+        c = (strassen_cost(p) if plan.multiply_engine == "strassen"
+             else spin_cost(p))
         leaf, mult = c["leafNode"], c["multiply"]
         total = (c["total"] - leaf - mult
                  + leaf * _leaf_rate(plan.leaf_solver, sig.backend)
@@ -237,7 +260,8 @@ def autotune(sig: ProblemSignature, candidates: list[Plan], *,
     # mesh descriptor (captured at signature_for time) is the authority: it
     # is what the plan will be cached under, so grouping must agree with it.
     # The fused `pallas` engine runs different code with or without a mesh,
-    # so it is always its own behavior group.
+    # so it is always its own behavior group; `strassen` likewise — its
+    # recursion differs from one einsum even off-mesh.
     mesh_active = bool(sig.mesh)
 
     def behavior(p: Plan) -> tuple:

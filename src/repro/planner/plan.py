@@ -19,7 +19,15 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["Plan", "ProblemSignature", "signature_for", "enumerate_plans",
-           "candidate_grids", "mesh_descriptor"]
+           "candidate_grids", "mesh_descriptor", "STRASSEN_MIN_N"]
+
+# Smallest problem dimension at which the Strassen engine enters the
+# default candidate space. Below this every sub-multiply of the SPIN
+# recursion sits at/below the Strassen crossover cutoff (512 — see
+# costmodel.STRASSEN_CUTOFF), so an enumerated strassen plan would execute
+# the identical classical program and only add measurement noise; the first
+# genuinely split Strassen level needs half-n > cutoff, i.e. n ≥ 2048.
+STRASSEN_MIN_N = 2048
 
 
 def mesh_descriptor() -> str:
@@ -108,7 +116,7 @@ class Plan:
 
     block_size: int              # paper's n/b; grid b = n // block_size
     leaf_solver: str = "linalg"
-    multiply_engine: str = "einsum"   # "einsum"|"allgather"|"ring"|"pallas"
+    multiply_engine: str = "einsum"   # one of core.multiply._ENGINES
     compute_dtype: str = "float32"    # dtype the recursion runs in
     refine_sweeps: int = 0            # Newton–Schulz polish sweeps afterwards
     grid_axes: tuple[str, str] = ("data", "model")
@@ -175,7 +183,9 @@ def enumerate_plans(sig: ProblemSignature, *,
     (same gating idea as refinement): off-TPU it runs in interpret mode and
     can never win, and top_k=None measurement sweeps would pay for warming
     interpret-mode programs. Pass `engines=(..., "pallas")` to opt in
-    anywhere.
+    anywhere. The ``strassen`` engine is enumerated only for large-n
+    signatures (n ≥ STRASSEN_MIN_N) where its recursion actually splits;
+    pass `engines=(..., "strassen")` to opt in below that.
     """
     from repro.core.spin import LEAF_SOLVERS  # late: avoid import cycle
 
@@ -186,6 +196,8 @@ def enumerate_plans(sig: ProblemSignature, *,
                    if sig.device_count > 1 else ("einsum",))
         if sig.backend == "tpu":
             engines = engines + ("pallas",)
+        if sig.n >= STRASSEN_MIN_N:
+            engines = engines + ("strassen",)
     if include_refinement is None:
         include_refinement = sig.backend == "tpu" and sig.dtype == "float32"
     include_refinement = (include_refinement and sig.kind == "inverse"

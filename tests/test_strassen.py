@@ -1,0 +1,411 @@
+"""Strassen engine suite (ISSUE 7): the recursive 7-multiply engine vs the
+XLA engines across the matrix zoo on every entry point, padding round-trips
+for odd/non-power-of-two shapes, the op-count oracle's exact 7/18 counts,
+crossover-model monotonicity, planner enumeration gating + selection +
+plan-cache round-trip, engine validation at the API boundary, the composed
+Pallas base case (SPIN_PALLAS_INTERPRET=1), and a 4-device mesh-harness
+child asserting every Strassen intermediate stays mesh-resident."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from mesh_harness import run_mesh
+
+from repro.core import (costmodel, count_ops, spin_inverse,
+                        spin_inverse_batched, spin_inverse_dense,
+                        spin_inverse_sharded, spin_solve_dense, verify)
+from repro.core.blockmatrix import BlockMatrix
+from repro.core.multiply import (_ENGINES, multiply_blocks, multiply_engine,
+                                 multiply_subtract, schur_update_blocks)
+from repro.core.strassen import (STRASSEN_CUTOFF_ENV, strassen_cutoff,
+                                 strassen_matmul, strassen_matmul_blocks)
+from repro.core.testing import MATRIX_FAMILIES, make_spd, make_spd_batch
+from repro.planner import (STRASSEN_MIN_N, PlanCache, enumerate_plans,
+                           get_plan, signature_for)
+
+N, BS = 64, 16          # grid 4 — two recursion levels, fast on CPU
+
+
+def _relerr(got, want):
+    g = jnp.asarray(got, jnp.float32)
+    w = jnp.asarray(want, jnp.float32)
+    return float(jnp.linalg.norm(g - w) / (jnp.linalg.norm(w) + 1e-30))
+
+
+def _tol(dtype):
+    return 5e-2 if dtype == jnp.bfloat16 else 2e-4
+
+
+# ----------------------------------------------------------- dense variant
+
+
+@pytest.mark.parametrize("n", [7, 16, 33, 48])
+def test_dense_matmul_parity_including_odd_n(n):
+    """strassen_matmul == classical product, with the pad-to-even round
+    trip exercised at every odd size on the recursion path."""
+    ka, kb = jax.random.split(jax.random.PRNGKey(n))
+    a = jax.random.normal(ka, (n, n), dtype=jnp.float32)
+    b = jax.random.normal(kb, (n, n), dtype=jnp.float32)
+    got = strassen_matmul(a, b, cutoff=8)     # small cutoff forces splits
+    assert got.shape == (n, n)
+    assert got.dtype == a.dtype
+    assert _relerr(got, a @ b) < 2e-5
+
+
+def test_dense_base_case_at_cutoff_is_classical():
+    n = 16
+    ka, kb = jax.random.split(jax.random.PRNGKey(0))
+    a = jax.random.normal(ka, (n, n), dtype=jnp.float32)
+    b = jax.random.normal(kb, (n, n), dtype=jnp.float32)
+    # cutoff >= n: no split happens, result is the classical GEMM exactly
+    assert _relerr(strassen_matmul(a, b, cutoff=n), a @ b) < 1e-6
+
+
+# ------------------------------------------------------------ grid variant
+
+
+@pytest.mark.parametrize("grid", [2, 3, 4])
+def test_grid_matmul_parity_including_odd_grid(grid):
+    """strassen_matmul_blocks vs the einsum engine — the odd grid (3)
+    exercises the zero-pad-to-even + unpad round trip on block grids."""
+    n = grid * BS
+    ka, kb = jax.random.split(jax.random.PRNGKey(grid))
+    a = jax.random.normal(ka, (n, n), dtype=jnp.float32)
+    b = jax.random.normal(kb, (n, n), dtype=jnp.float32)
+    ab = BlockMatrix.from_dense(a, BS).blocks
+    bb = BlockMatrix.from_dense(b, BS).blocks
+    want = multiply_blocks(ab, bb, "einsum")
+    got = strassen_matmul_blocks(ab, bb, cutoff=8)
+    assert got.shape == ab.shape
+    assert _relerr(BlockMatrix(got).to_dense(),
+                   BlockMatrix(want).to_dense()) < 2e-5
+
+
+@pytest.mark.parametrize("family", sorted(MATRIX_FAMILIES))
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_inverse_parity_across_matrix_zoo(family, dtype, monkeypatch):
+    """engine="strassen" must agree with the XLA engine on every zoo family
+    within dtype-aware tolerances (same recursion, only the multiply
+    decomposition differs). The ill-conditioned family compares residual
+    quality instead of inverses — κ≈1e6 amplifies last-ulp GEMM rounding
+    into O(1) differences between any two correct inverses."""
+    if family == "ill_conditioned_spd" and dtype == jnp.bfloat16:
+        pytest.skip("κ≈1e6 exceeds bf16's 8-bit mantissa (f32 covers it)")
+    make = MATRIX_FAMILIES[family]
+    kwargs = {"band": BS} if family == "block_banded_spd" else {}
+    seed = sum(ord(c) for c in family)
+    a = make(N, jax.random.PRNGKey(seed), dtype=dtype, **kwargs)
+    # Small cutoff so the 4-grid multiplies genuinely split; eager paths
+    # below go through jit inside spin_inverse_dense, so set the env BEFORE
+    # the first strassen trace of this (n, bs, dtype) signature.
+    monkeypatch.setenv(STRASSEN_CUTOFF_ENV, "16")
+    x_xla = spin_inverse_dense(a, BS, engine="einsum")
+    x_str = spin_inverse_dense(a, BS, engine="strassen")
+    assert x_str.dtype == x_xla.dtype
+    if family == "ill_conditioned_spd":
+        a32 = a.astype(jnp.float32)
+        eye = jnp.eye(N, dtype=jnp.float32)
+        r_xla = float(jnp.linalg.norm(a32 @ x_xla.astype(jnp.float32) - eye))
+        r_str = float(jnp.linalg.norm(a32 @ x_str.astype(jnp.float32) - eye))
+        assert r_str < 10 * max(r_xla, 1e-6), (r_str, r_xla)
+    else:
+        assert _relerr(x_str, x_xla) < _tol(dtype), family
+
+
+def test_batched_and_solve_entry_points(monkeypatch):
+    monkeypatch.setenv(STRASSEN_CUTOFF_ENV, "16")
+    batch = make_spd_batch(2, N, jax.random.PRNGKey(3))
+    got = spin_inverse_batched(batch, BS, engine="strassen")
+    want = spin_inverse_batched(batch, BS, engine="einsum")
+    assert _relerr(got, want) < 2e-4
+    a = make_spd(N, jax.random.PRNGKey(4))
+    rhs = jax.random.normal(jax.random.PRNGKey(5), (N, 4), dtype=jnp.float32)
+    xs = spin_solve_dense(a, rhs, BS, engine="strassen")
+    xe = spin_solve_dense(a, rhs, BS, engine="einsum")
+    assert _relerr(xs, xe) < 2e-4
+
+
+def test_sharded_entry_point_off_mesh_matches_dense(monkeypatch):
+    monkeypatch.setenv(STRASSEN_CUTOFF_ENV, "16")
+    a = make_spd(N, jax.random.PRNGKey(6))
+    got = spin_inverse_sharded(a, BS, engine="strassen")
+    want = spin_inverse_dense(a, BS, engine="strassen")
+    assert _relerr(got, want) < 1e-5
+
+
+# -------------------------------------------------- fused Schur update route
+
+
+def test_fused_schur_route_bitwise_vs_unfused(monkeypatch):
+    """multiply_subtract under strassen must stay bitwise identical to
+    multiply-then-subtract — the fused route's base case composes the SAME
+    product computation (kernels/strassen/ops.base_schur_update)."""
+    monkeypatch.setenv(STRASSEN_CUTOFF_ENV, "16")
+    k = jax.random.PRNGKey(7)
+    ka, kb, kc = jax.random.split(k, 3)
+    n = 4 * BS
+    mk = lambda key: BlockMatrix.from_dense(
+        jax.random.normal(key, (n, n), dtype=jnp.float32), BS)
+    a, b, c = mk(ka), mk(kb), mk(kc)
+    with multiply_engine("strassen"):
+        fused = multiply_subtract(a, b, c)
+        unfused = BlockMatrix(
+            multiply_blocks(a.blocks, b.blocks) - c.blocks)
+    assert jnp.array_equal(fused.to_dense(), unfused.to_dense())
+
+
+def test_schur_update_blocks_negate_conventions():
+    n = 2 * BS
+    ka, kb, kc = jax.random.split(jax.random.PRNGKey(8), 3)
+    a = BlockMatrix.from_dense(
+        jax.random.normal(ka, (n, n), dtype=jnp.float32), BS).blocks
+    b = BlockMatrix.from_dense(
+        jax.random.normal(kb, (n, n), dtype=jnp.float32), BS).blocks
+    c = BlockMatrix.from_dense(
+        jax.random.normal(kc, (n, n), dtype=jnp.float32), BS).blocks
+    prod = multiply_blocks(a, b, "strassen")
+    got_ab_c = schur_update_blocks(c, a, b, negate_c=True, engine="strassen")
+    got_c_ab = schur_update_blocks(c, a, b, negate_c=False, engine="strassen")
+    assert jnp.array_equal(got_ab_c, prod - c)
+    assert jnp.array_equal(got_c_ab, c - prod)
+
+
+# ------------------------------------------------------------- cutoff knob
+
+
+def test_cutoff_env_override(monkeypatch):
+    assert strassen_cutoff() == costmodel.STRASSEN_CUTOFF
+    monkeypatch.setenv(STRASSEN_CUTOFF_ENV, "96")
+    assert strassen_cutoff() == 96
+    monkeypatch.setenv(STRASSEN_CUTOFF_ENV, "not-an-int")
+    with pytest.raises(ValueError):
+        strassen_cutoff()
+
+
+def test_crossover_monotone_in_cutoff_and_n():
+    """The cost model's crossover point never moves DOWN as the cutoff
+    grows (a larger classical base can only delay the first Strassen win),
+    and once Strassen wins at some n it keeps winning at every doubling."""
+    crossovers = [costmodel.strassen_crossover_n(cutoff=c)
+                  for c in (64, 128, 256, 512, 1024)]
+    assert all(x is not None for x in crossovers)
+    assert crossovers == sorted(crossovers)
+    n0 = crossovers[-1]
+    for n in (n0, 2 * n0, 4 * n0):
+        macs, adds = costmodel.strassen_multiply_counts(n, cutoff=1024)
+        assert macs + 3 * adds < n ** 3
+
+
+def test_multiply_counts_recurrence():
+    # One split of n=1024 @ cutoff 512: 7 half-size classical products.
+    macs, adds = costmodel.strassen_multiply_counts(1024, cutoff=512)
+    assert macs == 7 * 512 ** 3
+    assert adds == 18 * 512 ** 2
+    # At/below the cutoff: classical, no adds.
+    assert costmodel.strassen_multiply_counts(512, cutoff=512) == (512**3, 0)
+
+
+# --------------------------------------------------------- op-count oracle
+
+
+def test_oracle_exact_7_18_counts(monkeypatch):
+    """The oracle pins EXACT counts: 7^levels base products per multiply,
+    18 add passes per split level — and the engine-blind counters (6/2/1
+    per SPIN level) must not notice the engine swap."""
+    monkeypatch.setenv(STRASSEN_CUTOFF_ENV, "16")  # every grid>1 splits
+    grid = 4
+    a = make_spd(grid * BS, jax.random.PRNGKey(9))
+    blocks = BlockMatrix.from_dense(a, BS)
+    with count_ops() as classical:
+        spin_inverse(blocks)
+    with count_ops() as counts, multiply_engine("strassen"):
+        spin_inverse(blocks)
+    verify.assert_paper_op_counts(grid, counts)
+    verify.assert_strassen_op_counts(grid, BS, counts)
+    # engine-blind counters identical to the classical run
+    assert counts.multiplies == classical.multiplies
+    assert counts.subtracts == classical.subtracts
+    assert counts.leaf_inversions == classical.leaf_inversions
+    # classical run books no Strassen ops at all
+    assert classical.strassen_base_multiplies == 0
+    assert classical.strassen_adds == 0
+    # and the expected counts are what the recurrence says for grid 4:
+    # 2 multiplies on 2-grids (1 split: 7 base, 18 adds) at the two outer
+    # levels of the SPIN tree... delegate the arithmetic to the oracle and
+    # pin one hand-computed entry to anchor it.
+    base, adds = verify.expected_strassen_counts(2, BS, cutoff=16)
+    assert (base, adds) == (7, 18)
+
+
+def test_oracle_counts_match_cutoff():
+    # cutoff above the whole problem: everything classical, zero adds.
+    base, adds = verify.expected_strassen_counts(4, BS,
+                                                 cutoff=4 * BS)
+    assert (base, adds) == (1, 0)
+    # adds never increase when the cutoff grows (fewer splits).
+    adds_by_cutoff = [verify.expected_strassen_counts(8, BS, cutoff=c)[1]
+                      for c in (8, 16, 64, 8 * BS)]
+    assert adds_by_cutoff == sorted(adds_by_cutoff, reverse=True)
+
+
+# ---------------------------------------------------------------- planner
+
+
+def test_enumeration_gated_to_large_n():
+    small = {p.multiply_engine
+             for p in enumerate_plans(signature_for("inverse", 256))}
+    boundary = {p.multiply_engine
+                for p in enumerate_plans(
+                    signature_for("inverse", STRASSEN_MIN_N))}
+    assert "strassen" not in small
+    assert "strassen" in boundary
+    # explicit opt-in below the gate still works
+    opted = {p.multiply_engine
+             for p in enumerate_plans(signature_for("inverse", 256),
+                                      engines=("einsum", "strassen"))}
+    assert "strassen" in opted
+
+
+def test_planner_selects_strassen_large_n_and_caches(tmp_path):
+    cache = PlanCache(str(tmp_path / "plans.json"))
+    plan = get_plan("inverse", 4096, jnp.float32, measure=False,
+                    cache=cache)
+    assert plan.multiply_engine == "strassen"
+    assert plan.multiply_engine in _ENGINES
+    # round-trip: the plan landed in the JSON cache, and a fresh cache
+    # object (the "new process") recalls the identical configuration
+    # without re-ranking.
+    sig = signature_for("inverse", 4096, jnp.float32)
+    stored = PlanCache(str(tmp_path / "plans.json")).get(sig)
+    assert stored is not None and stored.multiply_engine == "strassen"
+
+    import repro.planner.autotune as at
+    calls = []
+    orig = at.rank_plans
+    at.rank_plans = lambda *a, **k: calls.append(1) or orig(*a, **k)
+    try:
+        recalled = get_plan("inverse", 4096, jnp.float32, measure=False,
+                            cache=PlanCache(str(tmp_path / "plans.json")))
+    finally:
+        at.rank_plans = orig
+    assert not calls, "cache hit must not re-rank"
+    assert recalled.execution_key() == plan.execution_key()
+
+
+def test_strassen_cost_beats_spin_cost_at_large_n():
+    p = costmodel.CostParams(n=4096, b=8, cores=8)
+    assert costmodel.strassen_cost(p)["total"] < costmodel.spin_cost(p)["total"]
+
+
+# --------------------------------------------------------- engine boundary
+
+
+@pytest.mark.parametrize("call", [
+    lambda a: spin_inverse_dense(a, BS, engine="not-an-engine"),
+    lambda a: spin_inverse_sharded(a, BS, engine="not-an-engine"),
+    lambda a: spin_inverse_batched(a[None], BS, engine="not-an-engine"),
+    lambda a: spin_solve_dense(a, a[:, :2], BS, engine="not-an-engine"),
+])
+def test_unknown_engine_fails_at_the_boundary(call):
+    a = make_spd(N, jax.random.PRNGKey(10))
+    with pytest.raises(ValueError, match="unknown multiply engine"):
+        call(a)
+
+
+# ------------------------------------------- composed Pallas base (interpret)
+
+
+def test_pallas_base_composition_interpret(monkeypatch):
+    """With SPIN_PALLAS_INTERPRET=1 the Strassen leaves dispatch through the
+    Pallas grid GEMM (kernels/matmul) wherever the flattened leaf is
+    Mosaic-legal — the CI pallas-interpret job's composed path."""
+    from repro.kernels import PALLAS_INTERPRET_ENV
+    from repro.kernels.strassen import ops as st_ops
+
+    monkeypatch.setenv(PALLAS_INTERPRET_ENV, "1")
+    assert st_ops.pallas_base_default()
+    assert st_ops._leaf_engine(128) == "pallas"
+    assert st_ops._leaf_engine(576) == "einsum"   # not Mosaic-legal
+    g, bs = 4, 32                                 # leaves flatten to 64
+    n = g * bs
+    ka, kb = jax.random.split(jax.random.PRNGKey(11))
+    a = jax.random.normal(ka, (n, n), dtype=jnp.float32)
+    b = jax.random.normal(kb, (n, n), dtype=jnp.float32)
+    ab = BlockMatrix.from_dense(a, bs).blocks
+    bb = BlockMatrix.from_dense(b, bs).blocks
+    got = strassen_matmul_blocks(ab, bb, cutoff=64)
+    assert _relerr(BlockMatrix(got).to_dense(), a @ b) < 2e-5
+
+
+# ----------------------------------------------------------- mesh residency
+
+
+def test_mesh_resident_strassen_multiply():
+    """4-device child: every Strassen intermediate (operand adds, quadrant
+    combines, Schur results) is recorded in the spec ledger with a real
+    grid-over-mesh spec — no gather-to-dense between Strassen levels —
+    and the product still matches the classical engine."""
+    results = run_mesh("""
+        import jax, jax.numpy as jnp
+        from repro.compat import AxisType, make_mesh, set_mesh
+        from repro.core.blockmatrix import BlockMatrix
+        from repro.core.multiply import multiply_blocks
+        from repro.core.strassen import strassen_matmul_blocks
+        from repro.parallel.sharded_blockmatrix import (assert_mesh_resident,
+                                                        record_specs)
+
+        mesh = make_mesh((2, 2), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+        g, bs = 4, 16
+        n = g * bs
+        ka, kb = jax.random.split(jax.random.PRNGKey(0))
+        a = jax.random.normal(ka, (n, n), dtype=jnp.float32)
+        b = jax.random.normal(kb, (n, n), dtype=jnp.float32)
+        ab = BlockMatrix.from_dense(a, bs).blocks
+        bb = BlockMatrix.from_dense(b, bs).blocks
+        with set_mesh(mesh):
+            with record_specs() as recs:
+                got = jax.jit(
+                    lambda x, y: strassen_matmul_blocks(x, y, cutoff=16)
+                )(ab, bb)
+            assert_mesh_resident(recs)
+            want = multiply_blocks(ab, bb, "einsum")
+        err = float(jnp.linalg.norm(
+            BlockMatrix(got).to_dense() - BlockMatrix(want).to_dense())
+            / jnp.linalg.norm(BlockMatrix(want).to_dense()))
+        emit_result({
+            "err": err,
+            "ops": sorted({r.op for r in recs}),
+            "n_records": len(recs),
+            "all_have_specs": all(r.spec is not None for r in recs),
+        })
+    """, devices=4)
+    (r,) = results
+    assert r["err"] < 2e-5
+    assert r["all_have_specs"], r
+    assert any(op.startswith("strassen") for op in r["ops"]), r["ops"]
+    assert r["n_records"] > 0
+
+
+def test_mesh_resident_sharded_inverse_with_strassen():
+    """Full mesh-resident SPIN inversion under engine="strassen": the
+    sharded program stays on the mesh and the inverse is correct."""
+    results = run_mesh("""
+        import jax, jax.numpy as jnp
+        from repro.compat import AxisType, make_mesh, set_mesh
+        from repro.core import spin_inverse_sharded, testing
+
+        mesh = make_mesh((2, 2), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+        n, bs = 64, 16
+        a = testing.make_spd(n, jax.random.PRNGKey(1))
+        with set_mesh(mesh):
+            inv = spin_inverse_sharded(a, bs, engine="strassen")
+        resid = float(jnp.linalg.norm(
+            inv @ a - jnp.eye(n, dtype=jnp.float32)))
+        emit_result({"resid": resid})
+    """, devices=4,
+        extra_env={STRASSEN_CUTOFF_ENV: "16"})
+    (r,) = results
+    assert r["resid"] < 1e-3
