@@ -1,12 +1,29 @@
-"""Online inverse service benchmark: request throughput + the
-update-vs-refactor crossover (DESIGN.md §9).
+"""Online inverse service benchmark: request throughput, SLA latency
+percentiles, shed-load behavior, and the update-vs-refactor crossover
+(DESIGN.md §9).
 
-Three measurements on a `serving.SpinService`:
+Measurements on a `serving.SpinService` (each wrapped in a profile-
+decorated phase — `serving.metrics.PhaseLedger`, with
+`jax.profiler.TraceAnnotation` so phases show up named in a captured
+profile):
 
+  * ``first_request`` — wall seconds from process-cold service creation to
+    the first answered request (trace + compile + factorize + solve). With
+    ``SPIN_COMPILE_CACHE`` pointing at a persistent XLA compilation cache,
+    a SECOND process run of this benchmark must show this number collapse
+    to ~zero retrace — that delta IS the warm-restart story, and CI runs
+    the benchmark twice to assert it;
   * ``solve_recursion`` — requests/sec of the exact coalesced-`spin_solve`
     path (zero pending churn), `slots` requests per tick;
   * ``solve_maintained`` — requests/sec once SMW churn has switched solves
     to the O(n²·c) maintained-inverse GEMM path;
+  * ``latency`` — the service's own rolling p50/p95/p99 for the
+    queue-wait / solve / total split plus the per-tick queue-depth
+    distribution (`SpinService.metrics()`), reported as a point row;
+  * ``saturation`` — a bounded-queue service driven past its admission
+    capacity: every outcome is a typed verdict (served, shed, or
+    `AdmissionRejected`) and the row records the split — the explicit
+    shed-load contract, measured;
   * ``crossover`` — the refactor policy's modeled crossover rank for a
     steady rank-k update stream, AND the rank the live service actually
     refactored at (they agree by construction — the service asks the same
@@ -52,19 +69,29 @@ def run(emit, *, n: int = N, requests: int = REQUESTS, slots: int = SLOTS,
 
     from repro.core import testing
     from repro.planner import RefactorPolicy
-    from repro.serving import SpinService
+    from repro.serving import AdmissionRejected, PhaseLedger, SpinService
 
+    ledger = PhaseLedger()
     a = testing.make_spd(n, jax.random.PRNGKey(n))
     panels = [jax.random.normal(jax.random.PRNGKey(1000 + i), (n,))
               for i in range(requests)]
-
-    svc = SpinService(slots=slots)
-    st = svc.add_matrix("bench", a)
     points = []
 
+    # -- cold start → first answer (the number a warm compile cache cuts) ---
+    with ledger.profile("first_request"):
+        svc = SpinService(slots=slots)       # honors $SPIN_COMPILE_CACHE
+        st = svc.add_matrix("bench", a)
+        first = svc.solve("bench", panels[0])
+        svc.run_until_done()
+        jax.block_until_ready(first.x)
+    first_request_s = ledger.seconds["first_request"]
+    emit(csv_row(f"serve/first_request/n{n}", first_request_s,
+                 f"compile_cache={'on' if svc.compile_cache_dir else 'off'}"))
+
     # -- exact recursion path (fresh matrix), warm then measure -------------
-    _drain_requests(svc, "bench", panels[:slots])      # compile + warm
-    dt = _drain_requests(svc, "bench", panels)
+    with ledger.profile("solve_recursion"):
+        _drain_requests(svc, "bench", panels[:slots])  # compile + warm
+        dt = _drain_requests(svc, "bench", panels)
     points.append({"id": f"serve/solve_recursion/n{n}", "n": n,
                    "requests": requests, "slots": slots, "seconds": dt,
                    "req_per_s": requests / dt})
@@ -76,13 +103,53 @@ def run(emit, *, n: int = N, requests: int = REQUESTS, slots: int = SLOTS,
     up = svc.update("bench", u)
     svc.run_until_done()
     assert not up.refactored, "benchmark update unexpectedly refactored"
-    _drain_requests(svc, "bench", panels[:slots])      # compile + warm
-    dt = _drain_requests(svc, "bench", panels)
+    with ledger.profile("solve_maintained"):
+        _drain_requests(svc, "bench", panels[:slots])  # compile + warm
+        dt = _drain_requests(svc, "bench", panels)
     points.append({"id": f"serve/solve_maintained/n{n}", "n": n,
                    "requests": requests, "slots": slots, "seconds": dt,
                    "req_per_s": requests / dt})
     emit(csv_row(f"serve/solve_maintained/n{n}", dt / requests,
                  f"req_per_s={requests / dt:.1f}"))
+
+    # -- SLA latency percentiles (the service's own rolling reservoirs) -----
+    metrics = svc.metrics()
+    lat = metrics["latency_s"]
+    points.append({"id": f"serve/latency/n{n}", "n": n,
+                   "queue_wait_s": lat["queue_wait"],
+                   "solve_s": lat["solve"], "total_s": lat["total"],
+                   "queue_depth": metrics["queue_depth"]})
+    emit(csv_row(f"serve/latency/n{n}", lat["total"]["p50"],
+                 f"p95={lat['total']['p95']:.2e};"
+                 f"p99={lat['total']['p99']:.2e};"
+                 f"queue_p95={metrics['queue_depth']['p95']:.1f}"))
+
+    # -- saturation: drive a bounded queue past capacity --------------------
+    with ledger.profile("saturation"):
+        sat = SpinService(slots=max(slots // 4, 1),
+                          max_queue=max(requests // 4, 2))
+        sat.add_matrix("bench", a)
+        served_reqs, rejected = [], 0
+        for i, p in enumerate(panels):
+            try:
+                served_reqs.append(sat.solve("bench", p,
+                                             priority=i % 3))
+            except AdmissionRejected as e:
+                assert e.rejection.reason in ("queue_full", "tenant_quota")
+                rejected += 1
+        sat.run_until_done()
+    shed = sum(1 for r in served_reqs if r.rejected)
+    served = sum(1 for r in served_reqs if r.done and not r.rejected)
+    assert served + shed + rejected == requests      # typed, never lost
+    sat_m = sat.metrics()
+    points.append({"id": f"serve/saturation/n{n}", "n": n,
+                   "offered": requests, "served": served, "shed": shed,
+                   "rejected": rejected,
+                   "max_queue": sat.admission.max_queue,
+                   "queue_depth": sat_m["queue_depth"],
+                   "counters": sat_m["counters"]})
+    emit(csv_row(f"serve/saturation/n{n}", 0,
+                 f"served={served};shed={shed};rejected={rejected}"))
 
     # -- update-vs-refactor crossover sweep ---------------------------------
     policy = RefactorPolicy()
@@ -90,14 +157,15 @@ def run(emit, *, n: int = N, requests: int = REQUESTS, slots: int = SLOTS,
     svc2 = SpinService(slots=slots, policy=policy, drift_probes=0)
     st2 = svc2.add_matrix("sweep", a)
     observed = None
-    for i in range(4 * max(modeled // update_rank, 1)):
-        upd = svc2.update(
-            "sweep", jax.random.normal(jax.random.PRNGKey(2000 + i),
-                                       (n, update_rank)) / n ** 0.5)
-        svc2.run_until_done()
-        if upd.refactored:
-            observed = (i + 1) * update_rank
-            break
+    with ledger.profile("crossover_sweep"):
+        for i in range(4 * max(modeled // update_rank, 1)):
+            upd = svc2.update(
+                "sweep", jax.random.normal(jax.random.PRNGKey(2000 + i),
+                                           (n, update_rank)) / n ** 0.5)
+            svc2.run_until_done()
+            if upd.refactored:
+                observed = (i + 1) * update_rank
+                break
     points.append({"id": f"serve/crossover/n{n}/k{update_rank}", "n": n,
                    "update_rank": update_rank,
                    "modeled_crossover_rank": modeled,
@@ -111,6 +179,10 @@ def run(emit, *, n: int = N, requests: int = REQUESTS, slots: int = SLOTS,
               "n": n, "slots": slots,
               "plan": {"block_size": st.block_size,
                        "leaf_solver": st.leaf_solver, "engine": st.engine},
+              "compile_cache": {"dir": svc.compile_cache_dir,
+                                "first_request_s": first_request_s},
+              "phases": ledger.to_dict(),
+              "metrics": metrics,
               "points": points}
     write_json_report(report, json_path, emit, "serve")
     return report

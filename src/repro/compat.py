@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import contextlib
 import enum
+import os
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec
@@ -39,6 +40,7 @@ from jax.sharding import NamedSharding, PartitionSpec
 __all__ = [
     "get_abstract_mesh", "shard_map", "pvary", "set_mesh", "make_mesh",
     "AxisType", "axis_size", "jit_shardings", "pallas_tpu_compiler_params",
+    "enable_compilation_cache",
 ]
 
 _HAS_GET_ABSTRACT_MESH = hasattr(jax.sharding, "get_abstract_mesh")
@@ -149,6 +151,50 @@ def jit_shardings(tree, mesh=None):
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s) if _is_pspec(s) else s,
         tree, is_leaf=_is_pspec)
+
+
+def enable_compilation_cache(cache_dir: str | None = None) -> str | None:
+    """Point XLA's persistent compilation cache at a directory.
+
+    Serving's warm-restart story (DESIGN.md §9): a restarted server would
+    otherwise re-trace and re-compile every jitted program before its
+    first answer. With the persistent cache enabled, the second process
+    loads compiled executables from disk and the first-request latency
+    drops to ~steady-state.
+
+    `cache_dir=None` reads ``$SPIN_COMPILE_CACHE``; when that is unset
+    too, this is a no-op returning None — callers opt in per-deployment,
+    never accidentally. The eviction thresholds are lowered to "cache
+    everything" (serving programs are many and individually small; the
+    defaults skip sub-second compiles, which is exactly the retrace cost
+    a restart pays N times over). Config names drifted across JAX
+    versions, so each update is tolerated individually — on a version
+    missing a knob the cache still works with that default.
+    """
+    cache_dir = cache_dir or os.environ.get("SPIN_COMPILE_CACHE")
+    if not cache_dir:
+        return None
+    os.makedirs(cache_dir, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", cache_dir)
+    for name, value in (
+            ("jax_persistent_cache_min_compile_time_secs", 0.0),
+            ("jax_persistent_cache_min_entry_size_bytes", -1)):
+        try:
+            jax.config.update(name, value)
+        except AttributeError:                         # pragma: no cover
+            pass                 # knob absent on this version; defaults hold
+    # The cache module latches its state at the FIRST compilation: enabling
+    # the dir after anything has jitted (service constructed mid-process,
+    # after planner/test warmup) would silently no-op. Reset so the new dir
+    # takes effect from the next compile.
+    try:
+        from jax.experimental.compilation_cache import (
+            compilation_cache as _cc)
+
+        _cc.reset_cache()
+    except Exception:                                  # pragma: no cover
+        pass                     # module moved/absent; dir applies at init
+    return cache_dir
 
 
 def pallas_tpu_compiler_params(**kwargs):

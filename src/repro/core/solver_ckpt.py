@@ -35,7 +35,8 @@ from .multiply import multiply
 from .spin import leaf_inverse
 
 __all__ = ["CheckpointedSpin", "save_service_snapshot",
-           "load_service_snapshot", "validate_snapshot_key"]
+           "load_service_snapshot", "validate_snapshot_key",
+           "save_matrix_spill", "load_matrix_spill"]
 
 
 class CheckpointedSpin:
@@ -179,6 +180,34 @@ def save_service_snapshot(directory: str, *, meta: dict,
         if entry.startswith("blocks-") and entry != nonce:
             shutil.rmtree(os.path.join(directory, entry),
                           ignore_errors=True)
+
+
+def save_matrix_spill(directory: str, matrix_id: str, *, meta: dict,
+                      pair: dict[str, BlockMatrix]) -> str:
+    """Persist ONE matrix's serving state for residency eviction.
+
+    The spill is a single-matrix service snapshot under
+    ``directory/<matrix_id>`` — same meta.json + nonce'd block-dir format,
+    same crash safety — so an evicted matrix's on-disk shape is exactly
+    what `SpinService.restore` already knows how to read, and re-spilling
+    the same matrix reuses the GC'd-nonce overwrite path. `meta` is the
+    per-matrix entry (the service's snapshot `meta["matrices"][mid]`
+    shape); returns the spill directory.
+    """
+    validate_snapshot_key(matrix_id)
+    spill_dir = os.path.join(directory, matrix_id)
+    save_service_snapshot(spill_dir,
+                          meta={"matrices": {matrix_id: meta}},
+                          matrices={matrix_id: pair})
+    return spill_dir
+
+
+def load_matrix_spill(directory: str, matrix_id: str
+                      ) -> tuple[dict, dict[str, BlockMatrix]]:
+    """Inverse of `save_matrix_spill`: (per-matrix meta, {name: bm})."""
+    meta, matrices = load_service_snapshot(
+        os.path.join(directory, matrix_id))
+    return meta["matrices"][matrix_id], matrices[matrix_id]
 
 
 def load_service_snapshot(directory: str

@@ -149,6 +149,20 @@ class RefactorPolicy:
                                 refactor_cost_s=refactor_s,
                                 cumulative_s=cumulative, plan=plan)
 
+    def reinversion_cost(self, n: int, dtype, *,
+                         placement: str = "dense") -> float:
+        """Modeled seconds of a fresh planned inversion of an (n, n)
+        matrix — the price `SpinService`'s cost-aware eviction uses: a
+        matrix that is expensive to re-factorize is expensive to get
+        wrong by evicting, so it earns proportionally more residency
+        credit (GreedyDual). Same `predict_cost` machinery as `decide`,
+        under the offline signature (no churn axis)."""
+        from .autotune import predict_cost  # late: avoids import cycle
+
+        sig = signature_for("inverse", n, dtype, placement=placement)
+        plan, calibration = self._plan_for(sig)
+        return float(predict_cost(sig, plan, calibration))
+
     def crossover_rank(self, n: int, dtype, *, step_rank: int = 1,
                        placement: str = "dense") -> int:
         """Accumulated rank at which a steady rank-`step_rank` update stream

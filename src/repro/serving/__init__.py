@@ -1,6 +1,10 @@
+from .admission import AdmissionConfig, AdmissionRejected, Rejection
 from .engine import Request, ServingEngine
+from .metrics import PhaseLedger, Reservoir, ServiceMetrics
 from .spin_service import (MatrixState, SolveRequest, SpinService,
                            UpdateRequest)
 
 __all__ = ["Request", "ServingEngine",
-           "SpinService", "SolveRequest", "UpdateRequest", "MatrixState"]
+           "SpinService", "SolveRequest", "UpdateRequest", "MatrixState",
+           "AdmissionConfig", "AdmissionRejected", "Rejection",
+           "ServiceMetrics", "Reservoir", "PhaseLedger"]

@@ -1,0 +1,216 @@
+"""Serving observability: latency reservoirs, percentiles, phase profiling.
+
+`SpinService` answers requests; this module answers "how fast, and where
+did the time go". Three pieces:
+
+  * `Reservoir` — a bounded sliding window of float samples with exact
+    percentiles over the window (sort-on-read; windows are a few thousand
+    samples, so the sort is microseconds next to a solve). Rolling, not
+    cumulative: an SLA dashboard wants the *recent* p99, not the lifetime
+    one.
+  * `ServiceMetrics` — the service-side ledger: per-request queue-wait /
+    solve / total latency reservoirs, a queue-depth reservoir sampled
+    every tick, and named counters (per solve path, per rejection reason,
+    batch failures). `SpinService.metrics()` returns its `snapshot()`.
+  * `PhaseLedger` + `profiled` — maxtext-style profile-decorated phases
+    for the benchmarks: each phase records wall seconds into a ledger and
+    (where the runtime supports it) opens a `jax.profiler.TraceAnnotation`
+    so the phase shows up named in a captured profile. `bench_serve.py`
+    wraps its measurement sections in these and writes the ledger into
+    `BENCH_serve.json`.
+
+Timestamps come from an injectable monotonic clock so tests can drive
+deadlines and latency math deterministically.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import time
+from collections import deque
+from typing import Callable, Iterator
+
+__all__ = ["percentile", "Reservoir", "ServiceMetrics", "PhaseLedger",
+           "profiled", "PERCENTILES"]
+
+# The SLA percentiles every summary reports, keyed as "p50"/"p95"/"p99".
+PERCENTILES = (50.0, 95.0, 99.0)
+
+
+def percentile(sorted_samples, q: float) -> float:
+    """Linear-interpolation percentile of an ascending-sorted sequence.
+
+    Matches numpy's default ("linear") method without requiring the
+    samples as an ndarray; q in [0, 100].
+    """
+    n = len(sorted_samples)
+    if n == 0:
+        raise ValueError("percentile of an empty sample set")
+    if not 0.0 <= q <= 100.0:
+        raise ValueError(f"q must be in [0, 100], got {q}")
+    pos = (n - 1) * (q / 100.0)
+    lo = int(pos)
+    hi = min(lo + 1, n - 1)
+    frac = pos - lo
+    return float(sorted_samples[lo] * (1.0 - frac)
+                 + sorted_samples[hi] * frac)
+
+
+class Reservoir:
+    """Bounded sliding window of samples with exact window percentiles.
+
+    `window` bounds memory AND defines "rolling": once full, each new
+    sample evicts the oldest. `count`/`total` keep the lifetime tally so
+    throughput math is not limited to the window.
+    """
+
+    def __init__(self, window: int = 4096):
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        self._samples: deque[float] = deque(maxlen=window)
+        self.count = 0            # lifetime samples (window evicts, this doesn't)
+        self.total = 0.0          # lifetime sum
+
+    def record(self, value: float) -> None:
+        v = float(value)
+        self._samples.append(v)
+        self.count += 1
+        self.total += v
+
+    def __len__(self) -> int:
+        return len(self._samples)
+
+    def percentile(self, q: float) -> float:
+        return percentile(sorted(self._samples), q)
+
+    def summary(self) -> dict:
+        """{count, mean, p50, p95, p99, max} over the rolling window
+        (count/mean are lifetime). Zeros when nothing was recorded —
+        a dashboard row, not an error."""
+        if not self._samples:
+            return {"count": self.count, "mean": 0.0,
+                    **{f"p{int(q)}": 0.0 for q in PERCENTILES}, "max": 0.0}
+        ordered = sorted(self._samples)
+        return {"count": self.count,
+                "mean": self.total / max(self.count, 1),
+                **{f"p{int(q)}": percentile(ordered, q)
+                   for q in PERCENTILES},
+                "max": ordered[-1]}
+
+
+class ServiceMetrics:
+    """The per-service observability ledger `SpinService` writes into.
+
+    Request lifecycle timestamps (submit → admit → finish, stamped by the
+    service from its injectable clock) turn into three latency reservoirs:
+
+      queue_wait  admit − submit   (admission-control pressure)
+      solve       finish − admit   (compute, incl. coalesced batchmates)
+      total       finish − submit  (what the client experiences)
+
+    plus a queue-depth reservoir sampled once per tick and free-form
+    counters (`path_recursion`/`path_maintained`/`path_degraded`,
+    `rejected_<reason>`, `batch_failures`, …).
+    """
+
+    def __init__(self, *, window: int = 4096,
+                 clock: Callable[[], float] = time.monotonic):
+        self.clock = clock
+        self.queue_wait_s = Reservoir(window)
+        self.solve_s = Reservoir(window)
+        self.total_s = Reservoir(window)
+        self.queue_depth = Reservoir(window)
+        self.counters: dict[str, int] = {}
+
+    def count(self, name: str, k: int = 1) -> None:
+        self.counters[name] = self.counters.get(name, 0) + k
+
+    def observe_queue_depth(self, depth: int) -> None:
+        self.queue_depth.record(float(depth))
+
+    def observe_solve(self, req) -> None:
+        """Record a completed solve's latency split from its timestamps
+        (requests that never got a slot — rejected/shed — only count)."""
+        if req.path is not None:
+            self.count(f"path_{req.path}")
+        if req.admit_t is None or req.finish_t is None:
+            return
+        self.queue_wait_s.record(req.admit_t - req.submit_t)
+        self.solve_s.record(req.finish_t - req.admit_t)
+        self.total_s.record(req.finish_t - req.submit_t)
+
+    def observe_rejection(self, reason: str) -> None:
+        self.count("rejected")
+        self.count(f"rejected_{reason}")
+
+    def snapshot(self) -> dict:
+        """The `SpinService.metrics()` payload: JSON-ready, no live refs."""
+        return {
+            "latency_s": {"queue_wait": self.queue_wait_s.summary(),
+                          "solve": self.solve_s.summary(),
+                          "total": self.total_s.summary()},
+            "queue_depth": self.queue_depth.summary(),
+            "counters": dict(self.counters),
+        }
+
+
+class PhaseLedger:
+    """Named wall-clock phases for benchmark reports (maxtext-style).
+
+    Usage:
+        ledger = PhaseLedger()
+        with ledger.profile("solve_recursion"):
+            ...
+        report["phases"] = ledger.to_dict()
+
+    Re-entering a phase name accumulates (and counts) — a phase run per
+    request sums to its total share of the run.
+    """
+
+    def __init__(self, *, clock: Callable[[], float] = time.perf_counter):
+        self._clock = clock
+        self.seconds: dict[str, float] = {}
+        self.entries: dict[str, int] = {}
+
+    @contextlib.contextmanager
+    def profile(self, name: str) -> Iterator[None]:
+        t0 = self._clock()
+        with _trace_annotation(name):
+            try:
+                yield
+            finally:
+                dt = self._clock() - t0
+                self.seconds[name] = self.seconds.get(name, 0.0) + dt
+                self.entries[name] = self.entries.get(name, 0) + 1
+
+    def to_dict(self) -> dict:
+        return {name: {"seconds": self.seconds[name],
+                       "entries": self.entries[name]}
+                for name in self.seconds}
+
+
+@contextlib.contextmanager
+def _trace_annotation(name: str) -> Iterator[None]:
+    """jax.profiler.TraceAnnotation when available, no-op otherwise — the
+    ledger must work on any backend/version the compat layer supports."""
+    try:
+        import jax
+
+        ctx = jax.profiler.TraceAnnotation(name)
+    except Exception:                                  # pragma: no cover
+        ctx = contextlib.nullcontext()
+    with ctx:
+        yield
+
+
+def profiled(name: str, ledger: PhaseLedger):
+    """Decorator form of `PhaseLedger.profile` for benchmark phase fns."""
+    def wrap(fn):
+        import functools
+
+        @functools.wraps(fn)
+        def inner(*args, **kwargs):
+            with ledger.profile(name):
+                return fn(*args, **kwargs)
+        return inner
+    return wrap

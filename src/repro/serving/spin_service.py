@@ -13,9 +13,23 @@ the maintained inverse a request-serving object:
   * **continuous batching** — the same slot scheduler shape as
     `ServingEngine`: a fixed pool of micro-batch slots, requests admitted
     from a FIFO queue as slots free up, one `tick()` advances every live
-    slot. Solve slots targeting the same matrix are COALESCED into one
-    multi-RHS call per tick, so c concurrent requests cost one panel
-    recursion/GEMM instead of c;
+    slot. Solve slots targeting the same matrix AND the same rhs dtype
+    are COALESCED into one multi-RHS call per tick, so c concurrent
+    requests cost one panel recursion/GEMM instead of c (dtype is part of
+    the coalesce key: concatenating a bf16 panel next to an f32 one would
+    silently upcast and change the f32 request's bitwise answer);
+  * **admission control** (`serving.admission`) — a bounded queue with
+    priority/deadline-aware admission and an explicit shed-load policy:
+    at `max_queue` a new request either evicts a strictly lower-priority
+    queued solve (the victim gets a typed `Rejection` verdict) or is
+    rejected at submission with `AdmissionRejected`; `per_matrix_quota`
+    keeps one hot tenant from starving the rest; queued requests whose
+    deadline expires are shed, never silently served late. No rejected
+    request ever hangs — every outcome is a typed verdict;
+  * **observability** (`serving.metrics`) — per-request queue-wait /
+    solve / total latency with rolling p50/p95/p99, queue depth sampled
+    per tick, per-path and per-rejection-reason counters, surfaced as
+    `SpinService.metrics()` and reported by `benchmarks/bench_serve.py`;
   * **exact solve path** — a matrix with zero pending churn serves its
     coalesced batch through the planner-configured `spin_solve` entry
     point, bitwise-identical to the offline call on the same stacked
@@ -31,6 +45,13 @@ the maintained inverse a request-serving object:
     service re-factorizes in the background: the fresh inversion is
     DISPATCHED (XLA async) without blocking the scheduler loop, and the
     next consumer of the new inverse synchronizes on it naturally;
+  * **multi-tenant residency** — `max_resident` bounds how many matrices
+    stay device-resident. Beyond it the service evicts by cost-aware LRU
+    (GreedyDual: residency credit = recency clock + the planner's modeled
+    re-inversion price, `RefactorPolicy.reinversion_cost`), spilling the
+    evicted pair through `core.solver_ckpt.save_matrix_spill`; a request
+    for an evicted matrix rehydrates it transparently from its spill —
+    the maintained inverse round-trips bit-exactly, never re-factorized;
   * **degraded-mode serving** — with a `solve_deadline_s`, the exact
     recursion path runs guarded (retry with exponential backoff on
     `WorkerFailure`, deadline via the straggler layer's background tasks).
@@ -42,20 +63,34 @@ the maintained inverse a request-serving object:
     REPORTED on each request (`SolveRequest.residual_est`). When the hung
     shard's background work finally lands, the service re-factorizes and
     exits degraded mode;
-  * **snapshot/restore** — `snapshot()`/`SpinService.restore()` persist
-    every matrix's state through `core.solver_ckpt.save_service_snapshot`
-    (which rides `core.matrix_io`'s atomic per-row block writes), so a
-    restarted service resumes bit-identically.
+  * **snapshot/restore & warm restarts** — `snapshot()` /
+    `SpinService.restore()` persist every matrix's state (resident AND
+    evicted) plus the straggler-guard and admission config through
+    `core.solver_ckpt.save_service_snapshot`, so a restarted service
+    resumes bit-identically with its deadline protection intact
+    (`restore(**overrides)` is the explicit ops path to change guard
+    knobs on the way back up). `snapshot_async()` captures a quiesced
+    copy (JAX arrays are immutable, so the references ARE the copy) and
+    runs the device→host transfer + file I/O on a background thread — the
+    tick loop never stalls on a snapshot. Pair with the persistent XLA
+    compilation cache (`compat.enable_compilation_cache`, env
+    ``SPIN_COMPILE_CACHE``) and a restarted process pays ~zero retrace
+    before its first answer.
 
 Consistency model: per-matrix FIFO. An update acts as a barrier — solves
 submitted before it complete against the pre-update matrix, solves after
-it see the post-update one; requests on different matrices reorder freely.
+it see the post-update one; requests on different matrices reorder freely
+(admission drains highest-priority first across matrices, with effective
+priorities clamped so the per-matrix order is preserved — see
+`serving.admission`).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import tempfile
+import time
 from collections import defaultdict, deque
 from typing import Optional
 
@@ -72,8 +107,12 @@ from repro.core.update import (DriftTracker, add_low_rank, apply_inverse,
                                block_update_factors,
                                estimate_inverse_residual,
                                smw_update_inverse)
-from repro.parallel.straggler import (ShardTimeout, WorkerFailure,
+from repro.parallel.straggler import (FaultPlan, ShardTimeout, WorkerFailure,
                                       retry_with_backoff, start_background)
+
+from .admission import (AdmissionConfig, AdmissionRejected, Rejection,
+                        order_for_admission, shed_victim)
+from .metrics import ServiceMetrics
 
 __all__ = ["SolveRequest", "UpdateRequest", "MatrixState", "SpinService"]
 
@@ -85,12 +124,21 @@ class SolveRequest:
     uid: int
     matrix_id: str
     rhs: jax.Array
+    priority: int = 0                # higher admits first / sheds last
+    deadline_s: Optional[float] = None   # relative to submission
     # filled by the service
     x: Optional[jax.Array] = None
     done: bool = False
     slot: Optional[int] = None
     path: Optional[str] = None       # "recursion" | "maintained" | "degraded"
     residual_est: Optional[float] = None   # reported on the degraded path
+    rejected: bool = False           # shed/rejected by admission control
+    verdict: Optional[Rejection] = None    # typed verdict when rejected
+    failed: bool = False             # batch execution failed
+    error: Optional[str] = None      # the failure, when failed
+    submit_t: Optional[float] = None       # service-clock timestamps
+    admit_t: Optional[float] = None
+    finish_t: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -105,10 +153,15 @@ class UpdateRequest:
     v: Optional[jax.Array] = None
     delta_row: Optional[jax.Array] = None
     index: Optional[int] = None
+    priority: int = 0
     # filled by the service
     done: bool = False
     refactored: Optional[bool] = None
     reason: Optional[str] = None     # policy verdict ("smw"/"crossover"/…)
+    rejected: bool = False
+    verdict: Optional[Rejection] = None
+    submit_t: Optional[float] = None
+    finish_t: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -135,6 +188,10 @@ class MatrixState:
     sketch: object = None            # SketchedInverse, built lazily
     background: object = None        # the hung shard's BackgroundTask
     degraded_serves: int = 0
+    # residency (cost-aware LRU)
+    last_used: int = 0               # tick of the last touch
+    credit: float = 0.0              # GreedyDual credit: clock + cost
+    reinvert_cost_s: float = 0.0     # planner-modeled re-inversion price
 
     @property
     def pending_rank(self) -> int:
@@ -149,7 +206,15 @@ class SpinService:
                  seed: int = 0, solve_deadline_s: float | None = None,
                  fault_plan=None, solve_retries: int = 1,
                  backoff_base_s: float = 0.01,
-                 degraded_max_sweeps: int = 60):
+                 degraded_max_sweeps: int = 60,
+                 max_queue: int | None = None,
+                 per_matrix_quota: int | None = None,
+                 max_resident: int | None = None,
+                 spill_dir: str | None = None,
+                 metrics_window: int = 4096,
+                 clock=time.monotonic,
+                 compile_cache: str | bool | None = None):
+        from repro.compat import enable_compilation_cache
         from repro.planner import RefactorPolicy  # late: planner is optional
 
         self.slots = slots
@@ -163,6 +228,24 @@ class SpinService:
         self.solve_retries = solve_retries
         self.backoff_base_s = backoff_base_s
         self.degraded_max_sweeps = degraded_max_sweeps
+        # SLA posture (serving.admission): defaults keep legacy behavior.
+        self.admission = AdmissionConfig(max_queue=max_queue,
+                                         per_matrix_quota=per_matrix_quota)
+        # Residency: None = everything stays resident (legacy behavior).
+        if max_resident is not None and max_resident < 1:
+            raise ValueError(f"max_resident must be >= 1, got {max_resident}")
+        self.max_resident = max_resident
+        self._spill_dir = spill_dir
+        self._evicted: dict[str, dict] = {}      # mid -> {"n", "rank", ...}
+        self._evict_clock = 0.0                  # GreedyDual recency clock
+        self._clock = clock
+        self._metrics = ServiceMetrics(window=metrics_window, clock=clock)
+        self._snapshot_task = None               # in-flight async snapshot
+        # Warm restarts: point XLA's persistent compilation cache at a dir
+        # (explicit str, or $SPIN_COMPILE_CACHE; False disables even that).
+        self.compile_cache_dir = (
+            None if compile_cache is False else enable_compilation_cache(
+                compile_cache if isinstance(compile_cache, str) else None))
         self._free: deque[int] = deque(range(slots))
         self._live: dict[int, SolveRequest] = {}
         self._queue: deque = deque()
@@ -173,7 +256,9 @@ class SpinService:
         self.stats = {"solves": 0, "batches": 0, "coalesced_cols": 0,
                       "updates_smw": 0, "updates_refactor": 0,
                       "degraded_serves": 0, "shard_timeouts": 0,
-                      "shard_failures": 0, "retries": 0, "recoveries": 0}
+                      "shard_failures": 0, "retries": 0, "recoveries": 0,
+                      "rejected": 0, "shed": 0, "batch_failures": 0,
+                      "evictions": 0, "rehydrations": 0}
 
     # -- matrix admission ----------------------------------------------------
 
@@ -189,7 +274,7 @@ class SpinService:
         from repro.parallel.sharded_blockmatrix import ShardedBlockMatrix
         from repro.planner import get_plan
 
-        if matrix_id in self._matrices:
+        if matrix_id in self._matrices or matrix_id in self._evicted:
             raise ValueError(f"matrix {matrix_id!r} already admitted")
         _validate_snapshot_key(matrix_id)       # snapshot dirs embed the id
         if isinstance(a, ShardedBlockMatrix):
@@ -224,13 +309,26 @@ class SpinService:
             leaf_solver=leaf_solver or plan.leaf_solver,
             engine=engine or plan.multiply_engine, plan=plan,
             drift=DriftTracker.for_dtype(dtype, scale=self.drift_scale),
-            n=int(n), dtype=jnp.dtype(dtype), rank=len(self._matrices))
+            n=int(n), dtype=jnp.dtype(dtype),
+            rank=len(self._matrices) + len(self._evicted))
+        state.reinvert_cost_s = self._reinvert_cost(state)
+        self._make_room(protect={matrix_id})
         self._factorize(state)
         self._matrices[matrix_id] = state
+        self._touch(state)
         return state
 
     def matrix(self, matrix_id: str) -> MatrixState:
-        return self._matrices[matrix_id]
+        """The matrix's serving state, rehydrating it if evicted."""
+        return self._ensure_resident(matrix_id)
+
+    def is_resident(self, matrix_id: str) -> bool:
+        """Residency probe that never triggers a rehydration."""
+        if matrix_id in self._matrices:
+            return True
+        if matrix_id in self._evicted:
+            return False
+        raise KeyError(f"unknown matrix {matrix_id!r}")
 
     def _factorize(self, state: MatrixState) -> None:
         """(Re)compute the maintained inverse. Dispatch only — XLA executes
@@ -246,52 +344,205 @@ class SpinService:
         state.drift.reset()
         state.smw_spent_s = 0.0
 
+    # -- residency (cost-aware LRU over resident matrices) -------------------
+
+    def _reinvert_cost(self, state: MatrixState) -> float:
+        """The eviction price: the planner's modeled fresh-inversion cost
+        (`RefactorPolicy.reinversion_cost`). Policies without the method
+        (duck-typed stand-ins) degrade to pure LRU."""
+        pricer = getattr(self.policy, "reinversion_cost", None)
+        if pricer is None:
+            return 0.0
+        return float(pricer(state.n, state.dtype, placement=state.placement))
+
+    def _touch(self, state: MatrixState) -> None:
+        """GreedyDual credit refresh: an access re-earns the matrix its
+        re-inversion price on top of the current recency clock."""
+        state.last_used = self.ticks
+        state.credit = self._evict_clock + max(state.reinvert_cost_s, 1e-12)
+
+    def _spill(self) -> str:
+        if self._spill_dir is None:
+            self._spill_dir = tempfile.mkdtemp(prefix="spin-spill-")
+        return self._spill_dir
+
+    def _hot_matrices(self) -> set[str]:
+        """Matrices that must not be evicted right now: referenced by a
+        live slot or a queued request, or with background work in flight."""
+        hot = {r.matrix_id for r in self._live.values()}
+        hot.update(r.matrix_id for r in self._queue)
+        hot.update(mid for mid, st in self._matrices.items()
+                   if st.background is not None)
+        return hot
+
+    def _evict_one(self, protect: set[str]) -> None:
+        """Evict the resident matrix with the least GreedyDual credit
+        (ties: least recently used), spilling its state to disk."""
+        from repro.core.solver_ckpt import save_matrix_spill
+
+        hot = self._hot_matrices() | protect
+        candidates = [st for mid, st in self._matrices.items()
+                      if mid not in hot]
+        if not candidates:
+            raise RuntimeError(
+                "cannot evict: every resident matrix is busy (live slot, "
+                "queued request, or background work); raise max_resident")
+        victim = min(candidates,
+                     key=lambda st: (st.credit, st.last_used, st.matrix_id))
+        meta, pair = self._matrix_payload(victim)
+        save_matrix_spill(self._spill(), victim.matrix_id,
+                          meta=meta, pair=pair)
+        self._evicted[victim.matrix_id] = {"n": victim.n,
+                                           "rank": victim.rank}
+        del self._matrices[victim.matrix_id]
+        self._evict_clock = victim.credit        # GreedyDual clock advance
+        self.stats["evictions"] += 1
+        self._metrics.count("evictions")
+
+    def _make_room(self, protect: set[str]) -> None:
+        """Ensure capacity for ONE more resident matrix."""
+        if self.max_resident is None:
+            return
+        while len(self._matrices) >= self.max_resident:
+            self._evict_one(protect)
+
+    def _ensure_resident(self, matrix_id: str,
+                         protect: set[str] = frozenset()) -> MatrixState:
+        """Resident state for `matrix_id`, rehydrating from its spill if
+        evicted (transparent to callers — an evicted matrix is still
+        admitted, it just pays an I/O read on next touch)."""
+        from repro.core.solver_ckpt import load_matrix_spill
+
+        st = self._matrices.get(matrix_id)
+        if st is not None:
+            return st
+        rec = self._evicted.get(matrix_id)
+        if rec is None:
+            raise KeyError(f"unknown matrix {matrix_id!r}")
+        self._make_room(protect=set(protect) | {matrix_id})
+        meta, pair = load_matrix_spill(self._spill(), matrix_id)
+        st = self._state_from_meta(matrix_id, meta, pair)
+        st.rank = rec["rank"]
+        del self._evicted[matrix_id]
+        self._matrices[matrix_id] = st
+        self._touch(st)
+        self.stats["rehydrations"] += 1
+        self._metrics.count("rehydrations")
+        return st
+
+    def _dim_of(self, matrix_id: str) -> int:
+        st = self._matrices.get(matrix_id)
+        if st is not None:
+            return st.n
+        rec = self._evicted.get(matrix_id)
+        if rec is not None:
+            return rec["n"]
+        raise KeyError(f"unknown matrix {matrix_id!r}")
+
     # -- request plumbing ----------------------------------------------------
 
     def submit(self, req) -> None:
-        if req.matrix_id not in self._matrices:
-            raise KeyError(f"unknown matrix {req.matrix_id!r}")
+        """Admission gate: validate, apply the shed-load policy, enqueue.
+
+        Raises `KeyError` for an unknown matrix, `ValueError` for a
+        malformed request (a bad rhs must fail HERE, never inside a
+        coalesced batch in `tick()`), and `AdmissionRejected` — carrying
+        a typed `Rejection` — when the bounded queue sheds this request.
+        """
+        n = self._dim_of(req.matrix_id)
+        if isinstance(req, SolveRequest):
+            rhs = req.rhs
+            if (not hasattr(rhs, "ndim") or rhs.ndim not in (1, 2)
+                    or rhs.shape[0] != n):
+                raise ValueError(
+                    f"rhs for matrix {req.matrix_id!r} must be (n={n},) or "
+                    f"(n={n}, c), got shape "
+                    f"{tuple(getattr(rhs, 'shape', ()))}")
+        cfg = self.admission
+        if cfg.per_matrix_quota is not None:
+            queued = sum(1 for r in self._queue
+                         if r.matrix_id == req.matrix_id)
+            if queued >= cfg.per_matrix_quota:
+                self._raise_rejected(req, "tenant_quota",
+                                     f"matrix {req.matrix_id!r} already has "
+                                     f"{queued} queued requests (quota "
+                                     f"{cfg.per_matrix_quota})")
+        if cfg.max_queue is not None and len(self._queue) >= cfg.max_queue:
+            victim = shed_victim(self._queue, int(req.priority))
+            if victim is None:
+                self._raise_rejected(req, "queue_full",
+                                     f"{len(self._queue)} queued (bound "
+                                     f"{cfg.max_queue}) and no lower-"
+                                     "priority request to shed")
+            self._queue = deque(r for r in self._queue if r is not victim)
+            self._mark_shed(victim, "shed",
+                            f"evicted for priority-{req.priority} request "
+                            f"{req.uid}")
+        req.submit_t = self._clock()
         self._queue.append(req)
 
-    def solve(self, matrix_id: str, rhs: jax.Array) -> SolveRequest:
-        req = SolveRequest(uid=next(self._uid), matrix_id=matrix_id, rhs=rhs)
+    def _raise_rejected(self, req, reason: str, detail: str):
+        verdict = Rejection(reason, detail)
+        req.rejected = True
+        req.verdict = verdict
+        req.done = True
+        self.stats["rejected"] += 1
+        self._metrics.observe_rejection(reason)
+        raise AdmissionRejected(verdict)
+
+    def _mark_shed(self, req, reason: str, detail: str) -> None:
+        """Typed verdict for a request evicted AFTER admission (priority
+        shed, deadline expiry) — its submitter already holds the object,
+        so the verdict lands on the request, not in an exception."""
+        req.rejected = True
+        req.verdict = Rejection(reason, detail)
+        req.done = True
+        req.finish_t = self._clock()
+        self.stats["shed"] += 1
+        self._metrics.observe_rejection(reason)
+
+    def solve(self, matrix_id: str, rhs: jax.Array, *, priority: int = 0,
+              deadline_s: float | None = None) -> SolveRequest:
+        req = SolveRequest(uid=next(self._uid), matrix_id=matrix_id,
+                           rhs=jnp.asarray(rhs), priority=int(priority),
+                           deadline_s=deadline_s)
         self.submit(req)
         return req
 
     def update(self, matrix_id: str, u: jax.Array | None = None,
                v: jax.Array | None = None, *,
                delta_row: jax.Array | None = None,
-               index: int | None = None) -> UpdateRequest:
+               index: int | None = None,
+               priority: int = 0) -> UpdateRequest:
         if (u is None) == (delta_row is None):
             raise ValueError("pass exactly one of (u[, v]) or "
                              "(delta_row, index)")
         # Validate HERE, not at apply time: a malformed request must fail
         # at submission, never mid-_admit with the queue in hand.
-        state = self._matrices.get(matrix_id)
-        if state is None:
-            raise KeyError(f"unknown matrix {matrix_id!r}")
+        n = self._dim_of(matrix_id)
         if u is not None:
             uc = u.shape[1] if u.ndim == 2 else 1
             vv = u if v is None else v
             vc = vv.shape[1] if vv.ndim == 2 else 1
-            if u.shape[0] != state.n or vv.shape[0] != state.n or uc != vc:
+            if u.shape[0] != n or vv.shape[0] != n or uc != vc:
                 raise ValueError(
-                    f"update factors must be (n={state.n}, k) with equal "
+                    f"update factors must be (n={n}, k) with equal "
                     f"k, got u{tuple(u.shape)} v{tuple(vv.shape)}")
         if delta_row is not None:
             if index is None:
                 raise ValueError("delta_row updates require index=")
             bs = delta_row.shape[0]
-            if delta_row.shape != (bs, state.n) or state.n % bs:
+            if delta_row.shape != (bs, n) or n % bs:
                 raise ValueError(
-                    f"delta_row must be (bs, n={state.n}) with bs | n, "
+                    f"delta_row must be (bs, n={n}) with bs | n, "
                     f"got {delta_row.shape}")
-            if not 0 <= index < state.n // bs:
+            if not 0 <= index < n // bs:
                 raise ValueError(f"block index {index} out of range for "
-                                 f"n={state.n}, bs={bs}")
+                                 f"n={n}, bs={bs}")
         req = UpdateRequest(uid=next(self._uid), matrix_id=matrix_id,
                             u=u, v=v if v is not None else u,
-                            delta_row=delta_row, index=index)
+                            delta_row=delta_row, index=index,
+                            priority=int(priority))
         self.submit(req)
         return req
 
@@ -300,10 +551,19 @@ class SpinService:
     def _live_matrices(self) -> set[str]:
         return {r.matrix_id for r in self._live.values()}
 
+    def _expired(self, req) -> bool:
+        dl = getattr(req, "deadline_s", None)
+        return dl is not None and (self._clock() - req.submit_t) > dl
+
     def _admit(self) -> None:
-        """One FIFO pass over the queue. Updates execute inline the moment
-        no earlier solve on their matrix is still live; a deferred request
-        bars every later request on the same matrix (per-matrix order)."""
+        """One admission pass: highest effective priority first (per-matrix
+        FIFO preserved — see `serving.admission.order_for_admission`).
+        Updates execute inline the moment no earlier solve on their matrix
+        is still live; a deferred request bars every later request on the
+        same matrix (per-matrix order). Queued solves whose deadline has
+        expired are shed with a typed verdict instead of admitted."""
+        if len(self._queue) > 1:
+            self._queue = order_for_admission(self._queue)
         deferred: deque = deque()
         barred: set[str] = set()
         live = self._live_matrices()
@@ -316,14 +576,33 @@ class SpinService:
                         deferred.append(req)
                         barred.add(m)
                     else:
+                        self._ensure_resident(m, protect=barred)
                         self._apply_update(req)
                 else:
+                    if self._expired(req):
+                        self._mark_shed(req, "deadline",
+                                        f"deadline_s={req.deadline_s} "
+                                        "expired while queued")
+                        continue
                     if m in barred or not self._free:
                         deferred.append(req)
                         barred.add(m)
                     else:
+                        try:
+                            self._ensure_resident(m, protect=barred)
+                        except (OSError, RuntimeError) as e:
+                            # rehydration failed — fail THIS request with
+                            # the error; never lose it or its batchmates
+                            req.failed = True
+                            req.error = f"{type(e).__name__}: {e}"
+                            req.done = True
+                            req.finish_t = self._clock()
+                            self.stats["batch_failures"] += 1
+                            self._metrics.count("rehydration_failures")
+                            continue
                         slot = self._free.popleft()
                         req.slot = slot
+                        req.admit_t = self._clock()
                         self._live[slot] = req
                         live.add(m)
         finally:
@@ -334,24 +613,50 @@ class SpinService:
             self._queue = deferred
 
     def tick(self) -> int:
-        """Admit + advance: one coalesced solve per matrix with live slots.
-        Returns the number of live slots after recycling (always 0 today —
-        solves are single-shot — but the contract mirrors ServingEngine)."""
+        """Admit + advance: one coalesced solve per (matrix, rhs-dtype)
+        group with live slots. EVERY call counts toward `ticks` — update-
+        only and idle ticks included, so snapshot/restore never drifts
+        from the true tick count. Returns the number of live slots after
+        recycling (always 0 today — solves are single-shot — but the
+        contract mirrors ServingEngine)."""
+        self.ticks += 1
         self._admit()
+        self._metrics.observe_queue_depth(len(self._queue))
         if not self._live:
             return len(self._live)
-        groups: dict[str, list[SolveRequest]] = defaultdict(list)
+        groups: dict[tuple[str, str], list[SolveRequest]] = defaultdict(list)
         for slot in sorted(self._live):
             req = self._live[slot]
-            groups[req.matrix_id].append(req)
-        for matrix_id, reqs in groups.items():
+            # dtype is part of the coalesce key: stacking a bf16 panel into
+            # an f32 concatenate would silently upcast and change the f32
+            # requests' bitwise answers (the coalesce-bitwise contract)
+            groups[(req.matrix_id,
+                    jnp.dtype(req.rhs.dtype).name)].append(req)
+        for (matrix_id, _rhs_dtype), reqs in groups.items():
             state = self._matrices[matrix_id]
+            self._touch(state)
             panels = [r.rhs if r.rhs.ndim == 2 else r.rhs[:, None]
                       for r in reqs]
             rhs = panels[0] if len(panels) == 1 else jnp.concatenate(
                 panels, axis=1)
-            x, path, residual = self._solve_batch(state, rhs)
+            try:
+                x, path, residual = self._solve_batch(state, rhs)
+            except Exception as e:
+                # A failing batch must not leak its slots or hang its
+                # co-batched requests: recycle everything, mark each
+                # request failed with the error, keep serving.
+                now = self._clock()
+                for req in reqs:
+                    req.failed = True
+                    req.error = f"{type(e).__name__}: {e}"
+                    req.done = True
+                    req.finish_t = now
+                    self._recycle(req)
+                self.stats["batch_failures"] += 1
+                self._metrics.count("batch_failures")
+                continue
             col = 0
+            now = self._clock()
             for req, panel in zip(reqs, panels):
                 c = panel.shape[1]
                 out = x[:, col:col + c]
@@ -360,13 +665,20 @@ class SpinService:
                 req.path = path
                 req.residual_est = residual
                 req.done = True
-                del self._live[req.slot]
-                self._free.append(req.slot)
+                req.finish_t = now
+                self._recycle(req)
+                self._metrics.observe_solve(req)
             self.stats["solves"] += len(reqs)
             self.stats["batches"] += 1
             self.stats["coalesced_cols"] += rhs.shape[1]
-        self.ticks += 1
         return len(self._live)
+
+    def _recycle(self, req: SolveRequest) -> None:
+        """Return the request's slot to the free pool (idempotent)."""
+        slot = req.slot
+        if slot is not None and self._live.get(slot) is req:
+            del self._live[slot]
+            self._free.append(slot)
 
     def run_until_done(self, max_ticks: int = 10_000) -> None:
         for _ in range(max_ticks):
@@ -374,6 +686,25 @@ class SpinService:
                 return
             self.tick()
         raise RuntimeError("service did not drain")
+
+    # -- observability -------------------------------------------------------
+
+    def metrics(self) -> dict:
+        """The SLA dashboard payload: rolling latency percentiles
+        (queue-wait / solve / total), queue-depth distribution, per-path
+        and per-rejection counters, residency and lifetime stats."""
+        snap = self._metrics.snapshot()
+        snap["queue"] = {"depth_now": len(self._queue),
+                         "live_slots": len(self._live),
+                         "free_slots": len(self._free),
+                         "max_queue": self.admission.max_queue,
+                         "per_matrix_quota": self.admission.per_matrix_quota}
+        snap["residency"] = {"resident": len(self._matrices),
+                             "evicted": len(self._evicted),
+                             "max_resident": self.max_resident}
+        snap["ticks"] = self.ticks
+        snap["stats"] = dict(self.stats)
+        return snap
 
     # -- execution -----------------------------------------------------------
 
@@ -478,6 +809,7 @@ class SpinService:
 
     def _apply_update(self, req: UpdateRequest) -> None:
         state = self._matrices[req.matrix_id]
+        self._touch(state)
         if req.delta_row is not None:
             u, v = block_update_factors(req.delta_row, req.index, state.n)
         else:
@@ -509,15 +841,64 @@ class SpinService:
                     lambda p: apply_inverse(state.a, p), state.inv, sub,
                     state.n, probes=self.drift_probes)
         req.done = True
+        req.finish_t = self._clock()
         req.refactored = decision.refactor
         req.reason = decision.reason
 
     # -- snapshot / restore --------------------------------------------------
 
-    def snapshot(self, directory: str) -> None:
-        """Persist every matrix's serving state (quiesce first: pending
-        queue entries and live slots are NOT snapshotted)."""
-        from repro.core.solver_ckpt import save_service_snapshot
+    def _matrix_payload(self, st: MatrixState
+                        ) -> tuple[dict, dict[str, BlockMatrix]]:
+        """One matrix's snapshot entry: (meta dict, {"a","inv"} pair)."""
+        meta = {
+            "placement": st.placement, "block_size": st.block_size,
+            "leaf_solver": st.leaf_solver, "engine": st.engine,
+            "plan": st.plan.to_dict(), "n": st.n,
+            "dtype": jnp.dtype(st.dtype).name,
+            "drift": {"tolerance": st.drift.tolerance,
+                      "update_rank": st.drift.update_rank,
+                      "updates": st.drift.updates,
+                      "residual_est": st.drift.residual_est},
+            "smw_spent_s": st.smw_spent_s,
+            "smw_applied": st.smw_applied, "refactors": st.refactors,
+        }
+        if st.placement == "sharded":
+            pair = {"a": st.a.to_blockmatrix(),
+                    "inv": st.inv.to_blockmatrix()}
+        else:
+            pair = {"a": BlockMatrix.from_dense(st.a, st.block_size),
+                    "inv": BlockMatrix.from_dense(st.inv, st.block_size)}
+        return meta, pair
+
+    def _state_from_meta(self, mid: str, m: dict,
+                         pair: dict[str, BlockMatrix]) -> MatrixState:
+        """Inverse of `_matrix_payload` (shared by restore + rehydrate)."""
+        from repro.parallel.sharded_blockmatrix import ShardedBlockMatrix
+        from repro.planner.plan import Plan
+
+        if m["placement"] == "sharded":
+            a = ShardedBlockMatrix.from_blockmatrix(pair["a"])
+            inv = ShardedBlockMatrix.from_blockmatrix(pair["inv"])
+        else:
+            a, inv = pair["a"].to_dense(), pair["inv"].to_dense()
+        st = MatrixState(
+            matrix_id=mid, a=a, inv=inv, placement=m["placement"],
+            block_size=m["block_size"], leaf_solver=m["leaf_solver"],
+            engine=m["engine"], plan=Plan.from_dict(m["plan"]),
+            drift=DriftTracker(**m["drift"]), n=m["n"],
+            dtype=jnp.dtype(m["dtype"]),
+            smw_spent_s=m["smw_spent_s"],
+            smw_applied=m["smw_applied"], refactors=m["refactors"])
+        st.reinvert_cost_s = self._reinvert_cost(st)
+        return st
+
+    def _snapshot_payload(self) -> tuple[dict, dict]:
+        """Quiesce-checked, immutable snapshot payload (meta + matrices —
+        resident ones by reference, evicted ones read from their spills).
+        JAX arrays are immutable, so holding references IS a consistent
+        copy: updates applied after this call rebind `state.a`/`state.inv`
+        without mutating the captured arrays."""
+        from repro.core.solver_ckpt import load_matrix_spill
 
         if self._queue or self._live:
             raise RuntimeError(
@@ -533,60 +914,91 @@ class SpinService:
         meta = {"slots": self.slots, "ticks": self.ticks,
                 "drift_probes": self.drift_probes,
                 "drift_scale": self.drift_scale,
-                "stats": dict(self.stats), "matrices": {}}
+                "stats": dict(self.stats),
+                # the straggler-guard config MUST survive a restart — a
+                # restored service silently losing its deadline protection
+                # is an outage waiting for a straggler
+                "guard": {
+                    "solve_deadline_s": self.solve_deadline_s,
+                    "solve_retries": self.solve_retries,
+                    "backoff_base_s": self.backoff_base_s,
+                    "degraded_max_sweeps": self.degraded_max_sweeps,
+                    "fault_plan": (None if self.fault_plan is None
+                                   else self.fault_plan.to_json()),
+                },
+                "admission": {
+                    "max_queue": self.admission.max_queue,
+                    "per_matrix_quota": self.admission.per_matrix_quota,
+                },
+                "residency": {"max_resident": self.max_resident},
+                "matrices": {}}
         matrices: dict[str, dict[str, BlockMatrix]] = {}
         for mid, st in self._matrices.items():
-            meta["matrices"][mid] = {
-                "placement": st.placement, "block_size": st.block_size,
-                "leaf_solver": st.leaf_solver, "engine": st.engine,
-                "plan": st.plan.to_dict(), "n": st.n,
-                "dtype": jnp.dtype(st.dtype).name,
-                "drift": {"tolerance": st.drift.tolerance,
-                          "update_rank": st.drift.update_rank,
-                          "updates": st.drift.updates,
-                          "residual_est": st.drift.residual_est},
-                "smw_spent_s": st.smw_spent_s,
-                "smw_applied": st.smw_applied, "refactors": st.refactors,
-            }
-            if st.placement == "sharded":
-                pair = {"a": st.a.to_blockmatrix(),
-                        "inv": st.inv.to_blockmatrix()}
-            else:
-                pair = {"a": BlockMatrix.from_dense(st.a, st.block_size),
-                        "inv": BlockMatrix.from_dense(st.inv, st.block_size)}
-            matrices[mid] = pair
+            meta["matrices"][mid], matrices[mid] = self._matrix_payload(st)
+        for mid in self._evicted:
+            m, pair = load_matrix_spill(self._spill(), mid)
+            meta["matrices"][mid], matrices[mid] = m, pair
+        return meta, matrices
+
+    def snapshot(self, directory: str) -> None:
+        """Persist every matrix's serving state (quiesce first: pending
+        queue entries and live slots are NOT snapshotted)."""
+        from repro.core.solver_ckpt import save_service_snapshot
+
+        meta, matrices = self._snapshot_payload()
         save_service_snapshot(directory, meta=meta, matrices=matrices)
 
+    def snapshot_async(self, directory: str):
+        """`snapshot()` without stalling the tick loop: the quiesced copy
+        is captured NOW (cheap — immutable array references), then the
+        device→host transfer and file I/O run on a background thread.
+        Returns the `BackgroundTask`; `task.wait()` for durability, and
+        serving may continue immediately — later updates/evictions cannot
+        leak into the captured payload. One snapshot in flight at a time."""
+        from repro.core import solver_ckpt
+
+        if self._snapshot_task is not None and not self._snapshot_task.done:
+            raise RuntimeError("a snapshot is already in flight; wait() on "
+                               "it before starting another")
+        meta, matrices = self._snapshot_payload()
+        task = start_background(
+            lambda: solver_ckpt.save_service_snapshot(
+                directory, meta=meta, matrices=matrices))
+        self._snapshot_task = task
+        return task
+
     @classmethod
-    def restore(cls, directory: str, *, policy=None, seed: int = 0
-                ) -> "SpinService":
+    def restore(cls, directory: str, *, policy=None, seed: int = 0,
+                **overrides) -> "SpinService":
         """Rebuild a service from `snapshot()` output. The maintained
         inverse is reloaded, NOT recomputed — a restart costs I/O, never a
-        re-factorization — and resumed serving is bit-identical."""
+        re-factorization — and resumed serving is bit-identical. The
+        straggler-guard (solve_deadline_s, fault_plan, solve_retries,
+        backoff_base_s, degraded_max_sweeps) and admission/residency
+        config are rehydrated from the snapshot; `**overrides` is the
+        explicit ops path to change any constructor knob on the way back
+        up (e.g. ``restore(d, solve_deadline_s=0.5)``)."""
         from repro.core.solver_ckpt import load_service_snapshot
-        from repro.parallel.sharded_blockmatrix import ShardedBlockMatrix
-        from repro.planner.plan import Plan
 
         meta, matrices = load_service_snapshot(directory)
+        guard = dict(meta.get("guard", {}))
+        fault_plan = guard.pop("fault_plan", None)
+        if fault_plan is not None:
+            guard["fault_plan"] = FaultPlan.from_json(fault_plan)
+        kwargs = {**guard, **meta.get("admission", {}),
+                  **meta.get("residency", {}), **overrides}
         svc = cls(slots=meta["slots"], policy=policy,
                   drift_probes=meta["drift_probes"],
-                  drift_scale=meta["drift_scale"], seed=seed)
+                  drift_scale=meta["drift_scale"], seed=seed, **kwargs)
         svc.stats.update(meta.get("stats", {}))
         svc.ticks = meta.get("ticks", 0)
         for mid, m in meta["matrices"].items():
-            pair = matrices[mid]
-            if m["placement"] == "sharded":
-                a = ShardedBlockMatrix.from_blockmatrix(pair["a"])
-                inv = ShardedBlockMatrix.from_blockmatrix(pair["inv"])
-            else:
-                a, inv = pair["a"].to_dense(), pair["inv"].to_dense()
-            drift = DriftTracker(**m["drift"])
-            svc._matrices[mid] = MatrixState(
-                matrix_id=mid, a=a, inv=inv, placement=m["placement"],
-                block_size=m["block_size"], leaf_solver=m["leaf_solver"],
-                engine=m["engine"], plan=Plan.from_dict(m["plan"]),
-                drift=drift, n=m["n"], dtype=jnp.dtype(m["dtype"]),
-                smw_spent_s=m["smw_spent_s"],
-                smw_applied=m["smw_applied"], refactors=m["refactors"],
-                rank=len(svc._matrices))
+            st = svc._state_from_meta(mid, m, matrices[mid])
+            st.rank = len(svc._matrices)
+            svc._matrices[mid] = st
+            svc._touch(st)
+        # a restored set larger than max_resident spills back down
+        if svc.max_resident is not None:
+            while len(svc._matrices) > svc.max_resident:
+                svc._evict_one(protect=set())
         return svc

@@ -193,6 +193,108 @@ def test_submit_validation():
             svc.add_matrix(bad, make_spd(N, jax.random.PRNGKey(2)))
 
 
+def test_malformed_rhs_fails_at_submit():
+    """Regression: a wrong-shaped rhs used to sail through submit and blow
+    up inside tick()'s coalesced batch, leaking the batch's slots forever.
+    It must fail AT SUBMISSION with the queue untouched."""
+    _, svc = _service()
+    for bad in (jnp.zeros((N + 1,)),          # wrong n, vector
+                jnp.zeros((N - 1, 3)),        # wrong n, panel
+                jnp.zeros((N, 2, 2)),         # bad rank
+                jnp.zeros(())):               # scalar
+        with pytest.raises(ValueError):
+            svc.solve("m", bad)
+    assert not svc._queue and len(svc._free) == svc.slots
+    ok = svc.solve("m", jnp.zeros((N,)))
+    svc.run_until_done()
+    assert ok.done and not ok.failed
+
+
+def test_failing_batch_recycles_slots_and_fails_requests(monkeypatch):
+    """Regression: an exception inside the coalesced solve used to leak
+    every slot in the batch (requests stuck undone, slots never freed).
+    Now the batch fails CLOSED: each request is marked failed with the
+    error, every slot returns to the pool, and the service keeps serving."""
+    a, svc = _service()
+
+    def boom(state, rhs):
+        raise FloatingPointError("injected batch failure")
+
+    monkeypatch.setattr(svc, "_solve_batch", boom)
+    reqs = [svc.solve("m", jax.random.normal(jax.random.PRNGKey(i), (N,)))
+            for i in range(3)]
+    svc.tick()
+    assert all(r.done and r.failed for r in reqs)
+    assert all("FloatingPointError" in r.error for r in reqs)
+    assert all(r.x is None for r in reqs)
+    assert len(svc._free) == svc.slots and not svc._live   # no slot leak
+    assert svc.stats["batch_failures"] == 1
+    monkeypatch.undo()
+    ok = svc.solve("m", jax.random.normal(jax.random.PRNGKey(9), (N,)))
+    svc.run_until_done()                                   # still serving
+    assert ok.done and not ok.failed and ok.path == "recursion"
+
+
+def test_mixed_dtype_solves_never_co_batch():
+    """Regression: coalescing used to key on matrix_id alone, so a bf16
+    rhs co-batched with an f32 one silently upcast the concatenated panel
+    and broke the coalesce-bitwise contract. dtype is now part of the key:
+    the f32 answer is bitwise the same with or without a bf16 neighbor."""
+    a, svc = _service()
+    rhs32 = jax.random.normal(jax.random.PRNGKey(20), (N,))
+    solo = svc.solve("m", rhs32)
+    svc.tick()
+    rhs16 = jnp.asarray(
+        jax.random.normal(jax.random.PRNGKey(21), (N,)), jnp.bfloat16)
+    r32, r16 = svc.solve("m", rhs32), svc.solve("m", rhs16)
+    batches_before = svc.stats["batches"]
+    svc.tick()
+    assert r32.done and r16.done
+    assert svc.stats["batches"] == batches_before + 2      # two groups
+    assert r32.x.dtype == jnp.float32
+    assert bool((r32.x == solo.x).all())                   # bitwise contract
+
+
+def test_update_only_and_idle_ticks_are_counted():
+    """Regression: tick() returned before `ticks += 1` whenever no solve
+    held a slot, so update-only (and idle) ticks were never counted and a
+    snapshot's tick clock undercounted. Every tick() call counts."""
+    _, svc = _service()
+    svc.update("m", _rank_k(2, seed=70))
+    svc.tick()                                   # update-only tick
+    assert svc.ticks == 1
+    svc.tick()                                   # idle tick
+    assert svc.ticks == 2
+    svc.solve("m", jnp.zeros((N,)))
+    svc.run_until_done()
+    assert svc.ticks == 3
+
+
+def test_restore_preserves_straggler_guard_config():
+    """Regression: restore() used to drop the straggler-guard config — a
+    restarted service silently lost its deadline/retry/degraded posture.
+    The guard now rides the snapshot meta, with restore(**overrides) as
+    the explicit ops path to change it on the way back up."""
+    plan = FaultPlan().inject_straggler(1, 30.0)     # rank 1: NOT matrix "m"
+    _, svc = _service(solve_deadline_s=0.25, fault_plan=plan,
+                      solve_retries=3, backoff_base_s=0.07,
+                      degraded_max_sweeps=17)
+    with tempfile.TemporaryDirectory() as d:
+        svc.snapshot(d)
+        restored = SpinService.restore(d)
+        assert restored.solve_deadline_s == 0.25
+        assert restored.solve_retries == 3
+        assert restored.backoff_base_s == 0.07
+        assert restored.degraded_max_sweeps == 17
+        assert restored.fault_plan is not None
+        assert restored.fault_plan.stragglers == plan.stragglers
+        # explicit override path: ops may retune the guard at restore time
+        retuned = SpinService.restore(d, solve_deadline_s=1.5,
+                                      fault_plan=None, solve_retries=1)
+        assert retuned.solve_deadline_s == 1.5
+        assert retuned.fault_plan is None and retuned.solve_retries == 1
+
+
 def test_add_matrix_preblocked_input_fixes_the_plan_grid():
     """A BlockMatrix/ShardedBlockMatrix operand's own grid constrains the
     plan (same rule as core.spin._resolve_sharded_config) — the chosen
