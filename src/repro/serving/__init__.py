@@ -1,10 +1,11 @@
 from .admission import AdmissionConfig, AdmissionRejected, Rejection
 from .engine import Request, ServingEngine
 from .metrics import PhaseLedger, Reservoir, ServiceMetrics
-from .spin_service import (MatrixState, SolveRequest, SpinService,
-                           UpdateRequest)
+from .spin_service import (MatrixState, ResidencyBusy, SolveRequest,
+                           SpinService, UpdateRequest)
 
 __all__ = ["Request", "ServingEngine",
            "SpinService", "SolveRequest", "UpdateRequest", "MatrixState",
+           "ResidencyBusy",
            "AdmissionConfig", "AdmissionRejected", "Rejection",
            "ServiceMetrics", "Reservoir", "PhaseLedger"]

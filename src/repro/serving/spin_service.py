@@ -51,7 +51,13 @@ the maintained inverse a request-serving object:
     re-inversion price, `RefactorPolicy.reinversion_cost`), spilling the
     evicted pair through `core.solver_ckpt.save_matrix_spill`; a request
     for an evicted matrix rehydrates it transparently from its spill —
-    the maintained inverse round-trips bit-exactly, never re-factorized;
+    the maintained inverse round-trips bit-exactly, never re-factorized.
+    When every resident matrix is momentarily hot (live slot, queued
+    request, background work) rehydration hits `ResidencyBusy`: the
+    request is DEFERRED and retried next tick — transient pressure is
+    never an error, even with max_resident < concurrently-active
+    tenants. Only a genuine spill I/O `OSError` fails the request (solve
+    or update alike), with a typed failed/error verdict on the object;
   * **degraded-mode serving** — with a `solve_deadline_s`, the exact
     recursion path runs guarded (retry with exponential backoff on
     `WorkerFailure`, deadline via the straggler layer's background tasks).
@@ -114,7 +120,15 @@ from .admission import (AdmissionConfig, AdmissionRejected, Rejection,
                         order_for_admission, shed_victim)
 from .metrics import ServiceMetrics
 
-__all__ = ["SolveRequest", "UpdateRequest", "MatrixState", "SpinService"]
+__all__ = ["SolveRequest", "UpdateRequest", "MatrixState", "ResidencyBusy",
+           "SpinService"]
+
+
+class ResidencyBusy(RuntimeError):
+    """Transient: room is needed for one more resident matrix but every
+    candidate is momentarily hot (live slot, queued request, background
+    work). Admission defers the request and retries next tick — this is
+    NOT a failure, unlike an `OSError` from the spill/rehydrate I/O."""
 
 
 @dataclasses.dataclass
@@ -160,6 +174,8 @@ class UpdateRequest:
     reason: Optional[str] = None     # policy verdict ("smw"/"crossover"/…)
     rejected: bool = False
     verdict: Optional[Rejection] = None
+    failed: bool = False             # rehydration/apply failed
+    error: Optional[str] = None      # the failure, when failed
     submit_t: Optional[float] = None
     finish_t: Optional[float] = None
 
@@ -384,7 +400,7 @@ class SpinService:
         candidates = [st for mid, st in self._matrices.items()
                       if mid not in hot]
         if not candidates:
-            raise RuntimeError(
+            raise ResidencyBusy(
                 "cannot evict: every resident matrix is busy (live slot, "
                 "queued request, or background work); raise max_resident")
         victim = min(candidates,
@@ -501,6 +517,16 @@ class SpinService:
         self.stats["shed"] += 1
         self._metrics.observe_rejection(reason)
 
+    def _mark_failed(self, req, exc: BaseException) -> None:
+        """Typed failure verdict on the request object (solve or update):
+        the submitter sees done=True + failed=True + the error string —
+        never a silent hang."""
+        req.failed = True
+        req.error = f"{type(exc).__name__}: {exc}"
+        req.done = True
+        req.finish_t = self._clock()
+        self.stats["batch_failures"] += 1
+
     def solve(self, matrix_id: str, rhs: jax.Array, *, priority: int = 0,
               deadline_s: float | None = None) -> SolveRequest:
         req = SolveRequest(uid=next(self._uid), matrix_id=matrix_id,
@@ -576,7 +602,21 @@ class SpinService:
                         deferred.append(req)
                         barred.add(m)
                     else:
-                        self._ensure_resident(m, protect=barred)
+                        try:
+                            self._ensure_resident(m, protect=barred)
+                        except ResidencyBusy:
+                            # transient — every eviction candidate is hot
+                            # right now; retry next tick (bar the matrix
+                            # to keep per-matrix order)
+                            deferred.append(req)
+                            barred.add(m)
+                            continue
+                        except OSError as e:
+                            # spill I/O failure — a typed verdict, never a
+                            # dropped request with its submitter hanging
+                            self._mark_failed(req, e)
+                            self._metrics.count("rehydration_failures")
+                            continue
                         self._apply_update(req)
                 else:
                     if self._expired(req):
@@ -590,14 +630,18 @@ class SpinService:
                     else:
                         try:
                             self._ensure_resident(m, protect=barred)
-                        except (OSError, RuntimeError) as e:
-                            # rehydration failed — fail THIS request with
-                            # the error; never lose it or its batchmates
-                            req.failed = True
-                            req.error = f"{type(e).__name__}: {e}"
-                            req.done = True
-                            req.finish_t = self._clock()
-                            self.stats["batch_failures"] += 1
+                        except ResidencyBusy:
+                            # transient — nothing evictable this instant
+                            # (all resident matrices hold live slots or
+                            # background work); defer and retry next tick
+                            deferred.append(req)
+                            barred.add(m)
+                            continue
+                        except OSError as e:
+                            # spill I/O genuinely failed — fail THIS
+                            # request with the error; never lose it or
+                            # its batchmates
+                            self._mark_failed(req, e)
                             self._metrics.count("rehydration_failures")
                             continue
                         slot = self._free.popleft()

@@ -255,6 +255,71 @@ def test_unknown_matrix_still_raises_keyerror():
         svc.is_resident("nope")
 
 
+def test_transient_residency_pressure_defers_solve_not_fails():
+    """Regression: with max_resident < concurrently-active tenants, every
+    resident matrix can be momentarily hot (live slot / queued request).
+    That is TRANSIENT — the solve must be deferred and succeed on a later
+    tick, never failed with a 'cannot evict' error."""
+    with tempfile.TemporaryDirectory() as spill:
+        a, svc = _service(slots=4, max_resident=1, spill_dir=spill)
+        svc.add_matrix("other", make_spd(N, jax.random.PRNGKey(5)),
+                       block_size=BS)                 # evicts "m"
+        r_m = svc.solve("m", _rhs(1))     # needs rehydration, no room yet
+        r_o = svc.solve("other", _rhs(2))  # keeps "other" hot this tick
+        svc.tick()
+        assert r_o.done and not r_o.failed
+        assert not r_m.done and not r_m.failed        # deferred, NOT failed
+        svc.run_until_done()
+        assert r_m.done and not r_m.failed and not r_m.rejected
+        assert r_m.path == "recursion"
+        assert svc.stats["batch_failures"] == 0
+        assert float(jnp.max(jnp.abs(a @ r_m.x - r_m.rhs))) < 1e-3
+
+
+def test_transient_residency_pressure_defers_update_not_drops():
+    """Regression: an update needing rehydration while every resident
+    matrix is hot used to raise out of tick() AFTER the request left the
+    queue — silently dropped, submitter hung forever. It must be deferred
+    and applied on a later tick."""
+    with tempfile.TemporaryDirectory() as spill:
+        a, svc = _service(slots=2, max_resident=1, spill_dir=spill)
+        svc.add_matrix("other", make_spd(N, jax.random.PRNGKey(5)),
+                       block_size=BS)                 # evicts "m"
+        r_o = svc.solve("other", _rhs(1))  # holds "other" hot this tick
+        u = jax.random.normal(jax.random.PRNGKey(7), (N, 1)) / N ** 0.5
+        up = svc.update("m", u)
+        svc.run_until_done()
+        assert r_o.done and not r_o.failed
+        assert up.done and not up.rejected and not up.failed
+        r = svc.solve("m", _rhs(8))
+        svc.run_until_done()
+        a2 = a + u @ u.T
+        assert float(jnp.max(jnp.abs(a2 @ r.x - r.rhs))) < 1e-3
+
+
+def test_update_rehydration_io_failure_is_typed_not_dropped(monkeypatch):
+    """A genuine spill I/O error on the update path must land a typed
+    failed/error verdict on the request — never propagate out of tick()
+    with the request dropped and its submitter waiting on done forever."""
+    import repro.core.solver_ckpt as ckpt
+
+    with tempfile.TemporaryDirectory() as spill:
+        _, svc = _service(slots=2, max_resident=1, spill_dir=spill)
+        svc.add_matrix("other", make_spd(N, jax.random.PRNGKey(5)),
+                       block_size=BS)                 # evicts "m"
+
+        def boom(*args, **kw):
+            raise OSError("spill device gone")
+
+        monkeypatch.setattr(ckpt, "load_matrix_spill", boom)
+        up = svc.update("m", jnp.ones((N, 1)) / N)
+        svc.run_until_done()                          # must not raise
+        assert up.done and up.failed and not up.rejected
+        assert "OSError" in up.error
+        assert svc.stats["batch_failures"] == 1
+        assert svc.metrics()["counters"]["rehydration_failures"] == 1
+
+
 # -- async snapshots ----------------------------------------------------------
 
 
