@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import contextlib
 import enum
+import functools
 import os
 
 import jax
@@ -40,7 +41,7 @@ from jax.sharding import NamedSharding, PartitionSpec
 __all__ = [
     "get_abstract_mesh", "shard_map", "pvary", "set_mesh", "make_mesh",
     "AxisType", "axis_size", "jit_shardings", "pallas_tpu_compiler_params",
-    "enable_compilation_cache",
+    "enable_compilation_cache", "supports_float8",
 ]
 
 _HAS_GET_ABSTRACT_MESH = hasattr(jax.sharding, "get_abstract_mesh")
@@ -195,6 +196,28 @@ def enable_compilation_cache(cache_dir: str | None = None) -> str | None:
     except Exception:                                  # pragma: no cover
         pass                     # module moved/absent; dir applies at init
     return cache_dir
+
+
+@functools.lru_cache(maxsize=1)
+def supports_float8() -> bool:
+    """True when this jax build has a usable float8_e4m3fn storage dtype.
+
+    Capability probe for the precision policy's fp8 storage hook
+    (`core.precision`): the dtype attribute must exist AND a round-trip
+    cast through it must execute on the default backend — attribute
+    presence alone is not enough on builds where ml_dtypes registers the
+    type but the backend rejects it at lowering time.
+    """
+    import jax.numpy as jnp
+
+    if not hasattr(jnp, "float8_e4m3fn"):
+        return False
+    try:
+        x = jnp.ones((2, 2), dtype=jnp.float32)
+        roundtrip = x.astype(jnp.float8_e4m3fn).astype(jnp.float32)
+        return bool((roundtrip == x).all())
+    except Exception:                                  # pragma: no cover
+        return False
 
 
 def pallas_tpu_compiler_params(**kwargs):

@@ -1,8 +1,19 @@
 """repro.core — the paper's contribution: distributed block-recursive
-Strassen matrix inversion (SPIN) + the LU baseline, on JAX meshes."""
+Strassen matrix inversion (SPIN) + the LU baseline, on JAX meshes.
+
+Importing note: ``from repro.core import multiply`` gives the multiply
+FUNCTION, not the ``repro.core.multiply`` submodule (the package re-export
+shadows the module attribute). The submodule's other public names —
+``multiply_engine``, ``current_engine``, ``validate_engine`` — are
+re-exported here so no caller needs the submodule object; if you really
+want the module, ``import repro.core.multiply as m`` still works.
+"""
 
 from .blockmatrix import BlockMatrix, OpCounts, count_ops, block_sharding
-from .multiply import multiply, multiply_engine, validate_engine
+from .multiply import (multiply, multiply_engine, current_engine,
+                       validate_engine)
+from .precision import (PrecisionPolicy, PRECISION_PRESETS,
+                        resolve_precision)
 from .strassen import (strassen_cutoff, strassen_matmul,
                        strassen_matmul_blocks)
 from .spin import (spin_inverse, spin_inverse_dense, spin_inverse_sharded,
@@ -21,7 +32,8 @@ from . import costmodel, testing, verify
 
 __all__ = [
     "BlockMatrix", "OpCounts", "count_ops", "block_sharding",
-    "multiply", "multiply_engine", "validate_engine",
+    "multiply", "multiply_engine", "current_engine", "validate_engine",
+    "PrecisionPolicy", "PRECISION_PRESETS", "resolve_precision",
     "strassen_cutoff", "strassen_matmul", "strassen_matmul_blocks",
     "spin_inverse", "spin_inverse_dense", "spin_inverse_sharded",
     "leaf_inverse",

@@ -25,7 +25,7 @@ import numpy as np
 
 __all__ = [
     "CostParams", "spin_cost", "lu_cost", "spin_schedule",
-    "tpu_roofline_cost", "fit_scale", "DTYPE_BYTES",
+    "tpu_roofline_cost", "apply_inverse_cost", "fit_scale", "DTYPE_BYTES",
     "coded_work_multiplier", "coded_completion_cost", "plan_redundancy",
     "STRASSEN_CUTOFF", "strassen_multiply_counts", "strassen_cost",
     "strassen_crossover_n",
@@ -34,7 +34,8 @@ __all__ = [
 # Storage bytes per element, shared by every consumer that turns a dtype
 # name into roofline traffic (autotune.predict_cost, refactor_policy) —
 # one table so two pricers can never disagree on a dtype's width.
-DTYPE_BYTES = {"bfloat16": 2, "float16": 2, "float32": 4, "float64": 8}
+DTYPE_BYTES = {"bfloat16": 2, "float16": 2, "float32": 4, "float64": 8,
+               "float8_e4m3fn": 1}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -349,6 +350,22 @@ def tpu_roofline_cost(n: int, b: int, chips: int, *, dtype_bytes: int = 2,
                 bottleneck=max(
                     ("compute", t_compute), ("memory", t_memory),
                     ("collective", t_collective), key=lambda kv: kv[1])[0])
+
+
+def apply_inverse_cost(n: int, cols: int, chips: int, *,
+                       dtype_bytes: int = 4, hw: dict = TPU_V5E) -> float:
+    """Roofline seconds for one served `apply_inverse` GEMM: X @ B with the
+    resident (n, n) inverse stored at `dtype_bytes`/element and an (n, cols)
+    RHS. Each request streams the whole inverse through HBM, so for serving
+    column counts (cols ≪ n) the memory term dominates by orders of
+    magnitude — which is exactly why a bf16-stored inverse halves the serve
+    cost and the precision axis is worth a planner dimension.
+    """
+    flops = 2.0 * n * n * cols
+    bytes_hbm = (n * n + 2.0 * n * cols) * dtype_bytes
+    t_compute = flops / (chips * hw["peak_flops"])
+    t_memory = bytes_hbm / (chips * hw["hbm_bw"])
+    return float(max(t_compute, t_memory))
 
 
 def fit_scale(model_fn: Callable[[CostParams], dict], measured: dict[int, float],

@@ -25,6 +25,11 @@ from .blockmatrix import BlockMatrix
 
 __all__ = ["save_blockmatrix", "load_blockmatrix", "load_meta"]
 
+# Extended dtypes numpy's .npy format cannot carry natively: stored as a raw
+# same-width integer view, reinterpreted on load from meta.json's dtype.
+# (np.save of an ml_dtypes array silently degrades to a void dtype on load.)
+_RAW_VIEWS = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8}
+
 
 def _rows_for(host_index: int, n_hosts: int, grid: int) -> range:
     per = (grid + n_hosts - 1) // n_hosts
@@ -39,8 +44,9 @@ def save_blockmatrix(directory: str, bm: BlockMatrix, *, host_index: int = 0,
             json.dump({"n": bm.n, "block_size": bm.block_size,
                        "grid": bm.grid, "dtype": str(bm.dtype)}, f)
     blocks = np.asarray(jax.device_get(bm.blocks))
-    if str(blocks.dtype) == "bfloat16":       # numpy-storable raw view
-        blocks = blocks.view(np.uint16)
+    raw = _RAW_VIEWS.get(str(blocks.dtype))
+    if raw is not None:                       # numpy-storable raw view
+        blocks = blocks.view(raw)
     for i in _rows_for(host_index, n_hosts, bm.grid):
         tmp = os.path.join(directory, f"row_{i}.npy.tmp")
         with open(tmp, "wb") as f:
@@ -61,13 +67,12 @@ def load_blockmatrix(directory: str, *, host_index: int = 0,
     array across hosts)."""
     meta = load_meta(directory)
     grid, bs = meta["grid"], meta["block_size"]
-    is_bf16 = meta["dtype"] == "bfloat16"
-    rows = np.zeros((grid, grid, bs, bs),
-                    np.uint16 if is_bf16 else meta["dtype"])
+    raw = _RAW_VIEWS.get(meta["dtype"])
+    rows = np.zeros((grid, grid, bs, bs), raw or meta["dtype"])
     wanted = range(grid) if full else _rows_for(host_index, n_hosts, grid)
     for i in wanted:
         rows[i] = np.load(os.path.join(directory, f"row_{i}.npy"))
     arr = jnp.asarray(rows)
-    if is_bf16:
-        arr = arr.view(jnp.bfloat16)
+    if raw is not None:
+        arr = arr.view(jnp.dtype(meta["dtype"]))
     return BlockMatrix(arr)

@@ -147,19 +147,33 @@ def _solve(a: BlockMatrix, b: jax.Array, leaf_solver: str) -> jax.Array:
 
 
 def spin_solve(a: BlockMatrix, b: jax.Array, *,
-               leaf_solver: str = "linalg", auto: bool = False) -> jax.Array:
+               leaf_solver: str = "linalg", auto: bool = False,
+               precision=None) -> jax.Array:
     """Solve A X = B for multi-RHS B via the inverse-free SPIN recursion.
 
     a: BlockMatrix with power-of-two grid (SPD / leading-blocks-invertible,
        the paper's class). b: (n, k) or (n,) right-hand side(s).
     Returns X with b's shape; never materializes A⁻¹. auto=True asks the
     planner for the leaf solver (the grid is fixed by `a`'s structure).
+    precision (PrecisionPolicy | preset string | None) runs the recursion's
+    GEMMs at the policy's compute dtype (f32 accumulation as always) and
+    returns X at b's dtype; the default is bitwise-unchanged.
     """
     if auto:
         from repro.planner import planned_leaf_solver
 
         leaf_solver = planned_leaf_solver(a.n, a.block_size, a.dtype,
                                           kind="solve")
+    if precision is not None:
+        from .precision import resolve_precision
+        from .spin import _policy_active
+
+        policy = resolve_precision(precision)
+        if not policy.is_exact and _policy_active(policy, a.blocks.dtype):
+            cd = jnp.dtype(policy.resolve_compute(a.blocks.dtype))
+            x = spin_solve(BlockMatrix(a.blocks.astype(cd)), b.astype(cd),
+                           leaf_solver=leaf_solver)
+            return x.astype(b.dtype)
     grid = a.grid
     if grid & (grid - 1):
         raise ValueError(f"grid must be a power of two, got {grid}")
@@ -188,7 +202,9 @@ def spin_solve_dense(a: jax.Array, b: jax.Array,
                      block_size: int | None = None,
                      leaf_solver: str = "linalg", *,
                      engine: str | None = None,
-                     auto: bool = False) -> jax.Array:
+                     auto: bool = False,
+                     precision=None,
+                     compute_dtype=None) -> jax.Array:
     """Convenience: dense (n,n) A, (n,k) B -> X, jitted end to end.
 
     auto=True (or block_size=None) routes through the planner; the planned
@@ -196,12 +212,37 @@ def spin_solve_dense(a: jax.Array, b: jax.Array,
     bitwise identical to the equivalent explicit call. engine=None inherits
     the ambient `multiply_engine` context — resolved BEFORE the jit
     boundary so the concrete engine is always the static cache key.
+    precision (PrecisionPolicy | preset string | None→$SPIN_PRECISION/exact)
+    runs the solve at the policy's compute dtype and returns X at b's
+    dtype; `compute_dtype=` is the deprecated spelling and forwards with a
+    one-time warning.
     """
     validate_engine(engine)
+    from .precision import resolve_precision
+    from .spin import _policy_active
+
+    if compute_dtype is not None:
+        from .precision import (policy_from_compute_dtype,
+                                warn_deprecated_dtype_kwarg)
+
+        warn_deprecated_dtype_kwarg("spin_solve_dense")
+        if precision is None:
+            precision = policy_from_compute_dtype(compute_dtype)
+    policy = resolve_precision(precision)
+    active = not policy.is_exact and _policy_active(policy, a.dtype)
     if auto or block_size is None:
         from repro.planner import plan_solve
 
-        return plan_solve(a, b)
+        if not active:
+            return plan_solve(a, b)
+        cd = policy.resolve_compute(a.dtype)
+        return plan_solve(a.astype(cd), b.astype(cd),
+                          precision=policy).astype(b.dtype)
+    if active:
+        cd = policy.resolve_compute(a.dtype)
+        return _spin_solve_dense(a.astype(cd), b.astype(cd), block_size,
+                                 leaf_solver,
+                                 engine or current_engine()).astype(b.dtype)
     return _spin_solve_dense(a, b, block_size, leaf_solver,
                              engine or current_engine())
 
@@ -209,7 +250,8 @@ def spin_solve_dense(a: jax.Array, b: jax.Array,
 def spin_solve_sharded(a, b: jax.Array, block_size: int | None = None, *,
                        leaf_solver: str | None = None,
                        engine: str | None = None,
-                       auto: bool = False) -> jax.Array:
+                       auto: bool = False,
+                       precision=None) -> jax.Array:
     """Mesh-resident multi-RHS solve: one pjit program, row-sharded panels.
 
     The inverse-free Schur recursion with every dense panel pinned to the
@@ -220,11 +262,27 @@ def spin_solve_sharded(a, b: jax.Array, block_size: int | None = None, *,
     the sharded placement; explicit block_size / leaf_solver / engine
     arguments always override the planner's choices.
     """
-    from repro.parallel.sharded_blockmatrix import solve_program
+    from repro.parallel.sharded_blockmatrix import (ShardedBlockMatrix,
+                                                    solve_program)
 
-    from .spin import _resolve_sharded_config
+    from .spin import _policy_active, _resolve_sharded_config
 
     validate_engine(engine)
+    if precision is not None:
+        from .precision import resolve_precision
+
+        policy = resolve_precision(precision)
+        dense_in = not isinstance(a, (BlockMatrix, ShardedBlockMatrix))
+        if not policy.is_exact and _policy_active(
+                policy, a.dtype if dense_in else a.blocks.dtype):
+            if not dense_in:
+                raise ValueError(
+                    "low-precision policies on the sharded solve path need "
+                    f"a dense operand; got {type(a).__name__}")
+            cd = policy.resolve_compute(a.dtype)
+            return spin_solve_sharded(a.astype(cd), b.astype(cd), block_size,
+                                      leaf_solver=leaf_solver, engine=engine,
+                                      auto=auto).astype(b.dtype)
     a, leaf_solver, engine, _ = _resolve_sharded_config(
         "solve", a, block_size, leaf_solver, engine, auto)
     return solve_program(a, b, leaf_solver=leaf_solver, engine=engine)
@@ -311,7 +369,9 @@ def sketched_approx_inverse(a: jax.Array, key: jax.Array, *,
 
 def spin_inverse_batched(batch: jax.Array, block_size: int | None = None,
                          leaf_solver: str = "linalg", *,
-                         engine: str | None = None) -> jax.Array:
+                         engine: str | None = None,
+                         precision=None,
+                         compute_dtype=None) -> jax.Array:
     """SPIN-invert a (batch, n, n) stack of SPD matrices in one program.
 
     block_size=None asks the planner (cost-model path, no measurement —
@@ -333,10 +393,26 @@ def spin_inverse_batched(batch: jax.Array, block_size: int | None = None,
     if batch.ndim != 3:
         raise ValueError(f"expected (batch, n, n), got {batch.shape}")
     validate_engine(engine)
+    from .precision import resolve_precision
+    from .spin import _policy_active
+
+    if compute_dtype is not None:
+        from .precision import (policy_from_compute_dtype,
+                                warn_deprecated_dtype_kwarg)
+
+        warn_deprecated_dtype_kwarg("spin_inverse_batched")
+        if precision is None:
+            precision = policy_from_compute_dtype(compute_dtype)
+    policy = resolve_precision(precision)
     if block_size is None:
         from repro.planner import planned_block_size
 
         block_size = planned_block_size(batch.shape[-1], batch.dtype)
+    if not policy.is_exact and _policy_active(policy, batch.dtype):
+        cd = policy.resolve_compute(batch.dtype)
+        out = _spin_inverse_batched(batch.astype(cd), block_size,
+                                    leaf_solver, engine or current_engine())
+        return out.astype(policy.resolve_store(batch.dtype))
     return _spin_inverse_batched(batch, block_size, leaf_solver,
                                  engine or current_engine())
 

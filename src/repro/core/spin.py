@@ -105,18 +105,54 @@ def leaf_inverse(a: BlockMatrix, solver: str = "linalg") -> BlockMatrix:
 # ---------------------------------------------------------------------------
 
 
+def _policy_active(policy, operand_dtype) -> bool:
+    """True when `policy` changes the compute or storage dtype for this
+    operand (an "auto" policy over an already-matching dtype is a no-op —
+    running its polish anyway would change bits for nothing)."""
+    name = jnp.dtype(operand_dtype).name
+    return (policy.resolve_store(name) != name
+            or policy.resolve_compute(name) != name)
+
+
+def _lowp_inverse_blocks(a: BlockMatrix, leaf_solver: str,
+                         policy) -> BlockMatrix:
+    """Low-precision BlockMatrix inversion: recurse at the policy's compute
+    dtype, Newton–Schulz-polish in f32, store at the policy's store dtype."""
+    op = a.blocks.dtype
+    cd = jnp.dtype(policy.resolve_compute(op))
+    x = spin_inverse(BlockMatrix(a.blocks.astype(cd)),
+                     leaf_solver=leaf_solver)
+    if policy.polish_sweeps:
+        from .newton_schulz import newton_schulz_polish
+
+        a32 = BlockMatrix(a.blocks.astype(jnp.float32))
+        x32 = BlockMatrix(x.blocks.astype(jnp.float32))
+        x = newton_schulz_polish(a32, x32, sweeps=policy.polish_sweeps)
+    return BlockMatrix(x.blocks.astype(jnp.dtype(policy.resolve_store(op))))
+
+
 def spin_inverse(a: BlockMatrix, *, leaf_solver: str = "linalg",
-                 auto: bool = False) -> BlockMatrix:
+                 auto: bool = False, precision=None) -> BlockMatrix:
     """Distributed Strassen inversion of a BlockMatrix (grid must be 2^m).
 
     auto=True consults the planner (repro.planner) for the leaf solver —
     the block grid is already fixed by `a`'s structure. The result is
     bitwise identical to passing the planned solver explicitly.
+    precision (PrecisionPolicy | preset string | None→env/exact) runs the
+    recursion at the policy's compute dtype, polishes with Newton–Schulz in
+    f32, and returns blocks at the policy's store dtype; the default is
+    bitwise-unchanged.
     """
     if auto:
         from repro.planner import planned_leaf_solver
 
         leaf_solver = planned_leaf_solver(a.n, a.block_size, a.dtype)
+    if precision is not None:
+        from .precision import resolve_precision
+
+        policy = resolve_precision(precision)
+        if not policy.is_exact and _policy_active(policy, a.blocks.dtype):
+            return _lowp_inverse_blocks(a, leaf_solver, policy)
     b = a.grid
     if b & (b - 1):
         raise ValueError(f"grid must be a power of two, got {b}")
@@ -155,10 +191,31 @@ def _spin_inverse_dense(dense: jax.Array, block_size: int,
         return spin_inverse(a, leaf_solver=leaf_solver).to_dense()
 
 
+def _lowp_inverse_dense(dense: jax.Array, block_size: int, leaf_solver: str,
+                        engine: str | None, policy) -> jax.Array:
+    """Dense low-precision inversion: recursion at the policy's compute
+    dtype, f32 Newton–Schulz polish, result at the policy's store dtype."""
+    cd = policy.resolve_compute(dense.dtype)
+    approx = _spin_inverse_dense(dense.astype(cd), block_size, leaf_solver,
+                                 engine)
+    if policy.polish_sweeps:
+        from .newton_schulz import newton_schulz_polish
+
+        a32 = BlockMatrix.from_dense(dense.astype(jnp.float32), block_size)
+        x32 = BlockMatrix.from_dense(approx.astype(jnp.float32), block_size)
+        ctx = multiply_engine(engine) if engine else contextlib.nullcontext()
+        with ctx:
+            approx = newton_schulz_polish(
+                a32, x32, sweeps=policy.polish_sweeps).to_dense()
+    return approx.astype(policy.resolve_store(dense.dtype))
+
+
 def spin_inverse_dense(dense: jax.Array, block_size: int | None = None,
                        leaf_solver: str = "linalg", *,
                        engine: str | None = None,
-                       auto: bool = False) -> jax.Array:
+                       auto: bool = False,
+                       precision=None,
+                       compute_dtype=None) -> jax.Array:
     """Convenience: dense (n,n) -> dense (n,n) inverse via SPIN.
 
     With auto=True (or block_size=None) the planner picks block size, leaf
@@ -169,14 +226,36 @@ def spin_inverse_dense(dense: jax.Array, block_size: int | None = None,
     HERE, before the jit boundary, so the concrete engine name is always
     the static cache key (an executable traced under one ambient engine
     must never be served under another).
+
+    precision (PrecisionPolicy | preset string | None→$SPIN_PRECISION/exact)
+    runs the recursion at the policy's compute dtype, polishes in f32, and
+    returns the policy's store dtype; combined with auto=True the policy
+    rides the planner signature so the plan is priced (and cached) per
+    policy. `compute_dtype=` is the deprecated pre-policy spelling and
+    forwards to an equivalent policy with a one-time warning.
     """
     validate_engine(engine)
+    from .precision import resolve_precision
+
+    if compute_dtype is not None:
+        from .precision import (policy_from_compute_dtype,
+                                warn_deprecated_dtype_kwarg)
+
+        warn_deprecated_dtype_kwarg("spin_inverse_dense")
+        if precision is None:
+            precision = policy_from_compute_dtype(compute_dtype)
+    policy = resolve_precision(precision)
     if auto or block_size is None:
         from repro.planner import plan_inverse
 
-        return plan_inverse(dense)
+        if policy.is_exact:
+            return plan_inverse(dense)
+        return plan_inverse(dense, precision=policy)
     from .multiply import current_engine
 
+    if not policy.is_exact and _policy_active(policy, dense.dtype):
+        return _lowp_inverse_dense(dense, block_size, leaf_solver,
+                                   engine or current_engine(), policy)
     return _spin_inverse_dense(dense, block_size, leaf_solver,
                                engine or current_engine())
 
@@ -219,7 +298,7 @@ def _resolve_sharded_config(kind: str, a, block_size: int | None,
 def spin_inverse_sharded(a, block_size: int | None = None, *,
                          leaf_solver: str | None = None,
                          engine: str | None = None, auto: bool = False,
-                         coded=None, fault_plan=None):
+                         coded=None, fault_plan=None, precision=None):
     """Mesh-resident SPIN inversion: one pjit program, no inter-level gathers.
 
     The whole Algorithm-2 recursion — quadrant views, 6 multiplies,
@@ -248,6 +327,28 @@ def spin_inverse_sharded(a, block_size: int | None = None, *,
     from repro.parallel.sharded_blockmatrix import inverse_program
 
     validate_engine(engine)
+    if precision is not None:
+        from repro.parallel.sharded_blockmatrix import ShardedBlockMatrix
+
+        from .precision import resolve_precision
+
+        policy = resolve_precision(precision)
+        dense_in = not isinstance(a, (BlockMatrix, ShardedBlockMatrix))
+        if not policy.is_exact and _policy_active(
+                policy, a.dtype if dense_in else a.blocks.dtype):
+            if not dense_in:
+                raise ValueError(
+                    "low-precision policies on the sharded path need a "
+                    "dense operand (cast-in/cast-out semantics); got "
+                    f"{type(a).__name__}")
+            # Cast-in / cast-out: the mesh recursion has no polish stage,
+            # so the sharded low-precision contract is compute-dtype only.
+            cd = policy.resolve_compute(a.dtype)
+            out = spin_inverse_sharded(a.astype(cd), block_size,
+                                       leaf_solver=leaf_solver,
+                                       engine=engine, auto=auto,
+                                       coded=coded, fault_plan=fault_plan)
+            return out.astype(policy.resolve_store(a.dtype))
     if coded is not None:
         from repro.parallel.sharded_blockmatrix import ShardedBlockMatrix
         from repro.parallel.straggler import coded_inverse

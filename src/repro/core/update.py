@@ -220,6 +220,18 @@ def _apply_inverse_dense(inv: jax.Array, rhs: jax.Array) -> jax.Array:
                       preferred_element_type=acc).astype(rhs.dtype)
 
 
+@functools.partial(jax.jit, static_argnames=("compute", "accum"))
+def _apply_inverse_dense_lowp(inv: jax.Array, rhs: jax.Array,
+                              compute: str, accum: str) -> jax.Array:
+    # The low-precision serve GEMM: operands stay at `compute` (bf16 on the
+    # MXU — the default path above would upcast a bf16 inverse to f32 and
+    # forfeit the halved HBM traffic), accumulation at `accum` (the same
+    # f32-accumulator contract the Pallas kernels keep in VMEM).
+    c, a = jnp.dtype(compute), jnp.dtype(accum)
+    return jnp.matmul(inv.astype(c), rhs.astype(c),
+                      preferred_element_type=a).astype(rhs.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("axes", "mesh_fp"))
 def _apply_sharded_program(blocks: jax.Array, rhs: jax.Array,
                            axes: tuple[str, str], mesh_fp: str) -> jax.Array:
@@ -229,11 +241,16 @@ def _apply_sharded_program(blocks: jax.Array, rhs: jax.Array,
     return sbm._constrain_panel(out, "apply_inverse", axes)
 
 
-def apply_inverse(inv, rhs: jax.Array) -> jax.Array:
+def apply_inverse(inv, rhs: jax.Array, *, precision=None) -> jax.Array:
     """X·B for a maintained inverse in any representation; B (n, c) or (n,).
 
     The O(n²c) serving fast path: one panel GEMM against the resident
     inverse (row-anchored to the mesh for `ShardedBlockMatrix`).
+    `precision` (PrecisionPolicy | preset string | None) selects the serve
+    GEMM's compute/accumulate dtypes on the dense path — a bf16-stored
+    inverse under the "bf16" policy multiplies at bf16 with f32
+    accumulation instead of being upcast; the block representations already
+    accumulate in f32 and are unaffected.
     """
     rhs2, vector = _as_panel(rhs)
     sbm = _sharded_helpers()
@@ -245,7 +262,17 @@ def apply_inverse(inv, rhs: jax.Array) -> jax.Array:
         _bump("solve_applies")
         x = _jit_blocks_apply(inv.blocks, rhs2).astype(rhs.dtype)
     else:
-        x = _apply_inverse_dense(inv, rhs2)
+        policy = None
+        if precision is not None:
+            from .precision import resolve_precision
+
+            policy = resolve_precision(precision)
+        if policy is not None and not policy.is_exact:
+            x = _apply_inverse_dense_lowp(
+                inv, rhs2, compute=policy.resolve_compute(inv.dtype),
+                accum=policy.accum_dtype)
+        else:
+            x = _apply_inverse_dense(inv, rhs2)
     return x[:, 0] if vector else x
 
 
@@ -331,17 +358,21 @@ def block_update_factors(delta_row: jax.Array, index: int, n: int
 
 
 def estimate_inverse_residual(apply_a, inv, key: jax.Array, n: int,
-                              probes: int = 2) -> float:
+                              probes: int = 2, *, precision=None) -> float:
     """Probe estimate of ‖A X − I‖∞: max_z ‖A(Xz) − z‖∞ / ‖z‖∞, O(n²·probes).
 
     `apply_a(panel)` applies the CURRENT matrix A' (base + accumulated
     updates) to an (n, probes) panel; `inv` is the maintained inverse in any
     `apply_inverse` representation. A randomized lower bound on the true
     residual — cheap enough to run per update, and the drift signal the
-    refactor policy compares against the dtype tolerance.
+    refactor policy compares against the dtype tolerance. `precision`
+    forwards to `apply_inverse` so the probe measures the SAME GEMM the
+    policy serves with — certifying a bf16 serve path with f32 probes
+    would under-report the residual requests actually see.
     """
     z = jax.random.normal(key, (n, probes), jnp.float32)
-    r = apply_a(apply_inverse(inv, z)).astype(jnp.float32) - z
+    x = apply_inverse(inv, z, precision=precision)
+    r = apply_a(x).astype(jnp.float32) - z
     return float(jnp.max(jnp.abs(r)) / jnp.max(jnp.abs(z)))
 
 

@@ -73,9 +73,16 @@ def _gauss_jordan_kernel(a_ref, out_ref, m_ref) -> None:
     out_ref[0] = m_ref[:, bs:].astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def leaf_inverse_pallas(blocks: jax.Array, interpret: bool = False) -> jax.Array:
-    """Invert a batch of square blocks: (batch, bs, bs) -> (batch, bs, bs)."""
+@functools.partial(jax.jit, static_argnames=("interpret", "out_dtype"))
+def leaf_inverse_pallas(blocks: jax.Array, interpret: bool = False,
+                        out_dtype=None) -> jax.Array:
+    """Invert a batch of square blocks: (batch, bs, bs) -> (batch, bs, bs).
+
+    The GJ sweep runs in the f32 VMEM scratch regardless of input dtype;
+    out_dtype (default: the blocks' dtype) is what the result is cast to on
+    the final write — pass float32 to keep the sweep un-rounded out of
+    low-precision operands, same contract as the matmul kernels.
+    """
     if blocks.ndim != 3 or blocks.shape[1] != blocks.shape[2]:
         raise ValueError(f"expected (batch, bs, bs), got {blocks.shape}")
     batch, bs, _ = blocks.shape
@@ -84,7 +91,7 @@ def leaf_inverse_pallas(blocks: jax.Array, interpret: bool = False) -> jax.Array
         grid=(batch,),
         in_specs=[pl.BlockSpec((1, bs, bs), lambda b: (b, 0, 0))],
         out_specs=pl.BlockSpec((1, bs, bs), lambda b: (b, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct(blocks.shape, blocks.dtype),
+        out_shape=jax.ShapeDtypeStruct(blocks.shape, out_dtype or blocks.dtype),
         scratch_shapes=[pltpu.VMEM((bs, 2 * bs), jnp.float32)],
         interpret=interpret,
     )(blocks)
@@ -160,10 +167,15 @@ def _blocked_gauss_jordan_kernel(a_ref, out_ref, m_ref, *, panel: int) -> None:
     out_ref[0] = m_ref[:, bs:].astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("panel", "interpret"))
+@functools.partial(jax.jit, static_argnames=("panel", "interpret", "out_dtype"))
 def blocked_leaf_inverse_pallas(blocks: jax.Array, panel: int | None = None,
-                                interpret: bool = False) -> jax.Array:
-    """Blocked-GJ inverse of a batch of blocks: (batch, bs, bs) -> same."""
+                                interpret: bool = False,
+                                out_dtype=None) -> jax.Array:
+    """Blocked-GJ inverse of a batch of blocks: (batch, bs, bs) -> same.
+
+    out_dtype (default: the blocks' dtype) is what the f32 panel sweep is
+    cast to on the final write, matching `leaf_inverse_pallas`.
+    """
     if blocks.ndim != 3 or blocks.shape[1] != blocks.shape[2]:
         raise ValueError(f"expected (batch, bs, bs), got {blocks.shape}")
     batch, bs, _ = blocks.shape
@@ -175,7 +187,7 @@ def blocked_leaf_inverse_pallas(blocks: jax.Array, panel: int | None = None,
         grid=(batch,),
         in_specs=[pl.BlockSpec((1, bs, bs), lambda b: (b, 0, 0))],
         out_specs=pl.BlockSpec((1, bs, bs), lambda b: (b, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct(blocks.shape, blocks.dtype),
+        out_shape=jax.ShapeDtypeStruct(blocks.shape, out_dtype or blocks.dtype),
         scratch_shapes=[pltpu.VMEM((bs, 2 * bs), jnp.float32)],
         compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("arbitrary",)),

@@ -17,29 +17,37 @@ __all__ = ["leaf_inverse", "batched_leaf_inverse", "blocked_leaf_inverse",
            "batched_blocked_leaf_inverse", "triangular_solve"]
 
 
-def leaf_inverse(block: jax.Array) -> jax.Array:
-    """Invert one (bs, bs) block (SPIN's Algorithm-2 leaf, scalar GJ)."""
+def leaf_inverse(block: jax.Array, out_dtype=None) -> jax.Array:
+    """Invert one (bs, bs) block (SPIN's Algorithm-2 leaf, scalar GJ).
+
+    out_dtype=float32 keeps the f32 GJ sweep un-rounded on the final write
+    even for low-precision blocks (same contract as the matmul wrappers).
+    """
     return leaf_inverse_pallas(
-        block[None], interpret=pallas_interpret_default())[0]
+        block[None], interpret=pallas_interpret_default(),
+        out_dtype=out_dtype)[0]
 
 
-def batched_leaf_inverse(blocks: jax.Array) -> jax.Array:
+def batched_leaf_inverse(blocks: jax.Array, out_dtype=None) -> jax.Array:
     """Invert (batch, bs, bs) blocks — one grid program per block."""
-    return leaf_inverse_pallas(blocks, interpret=pallas_interpret_default())
+    return leaf_inverse_pallas(blocks, interpret=pallas_interpret_default(),
+                               out_dtype=out_dtype)
 
 
-def blocked_leaf_inverse(block: jax.Array,
-                         panel: int | None = None) -> jax.Array:
+def blocked_leaf_inverse(block: jax.Array, panel: int | None = None,
+                         out_dtype=None) -> jax.Array:
     """Invert one (bs, bs) block with the blocked (rank-t MXU) GJ sweep."""
     return blocked_leaf_inverse_pallas(
-        block[None], panel=panel, interpret=pallas_interpret_default())[0]
+        block[None], panel=panel, interpret=pallas_interpret_default(),
+        out_dtype=out_dtype)[0]
 
 
-def batched_blocked_leaf_inverse(blocks: jax.Array,
-                                 panel: int | None = None) -> jax.Array:
+def batched_blocked_leaf_inverse(blocks: jax.Array, panel: int | None = None,
+                                 out_dtype=None) -> jax.Array:
     """Blocked-GJ inverse of (batch, bs, bs) blocks."""
     return blocked_leaf_inverse_pallas(
-        blocks, panel=panel, interpret=pallas_interpret_default())
+        blocks, panel=panel, interpret=pallas_interpret_default(),
+        out_dtype=out_dtype)
 
 
 def triangular_solve(t: jax.Array, b: jax.Array, *, lower: bool = True,

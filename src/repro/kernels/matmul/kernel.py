@@ -126,16 +126,19 @@ def _schur_update_kernel(c_ref, a_ref, b_ref, out_ref, acc_ref, *,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("alpha", "beta", "tiles", "interpret"))
+                   static_argnames=("alpha", "beta", "tiles", "interpret",
+                                    "out_dtype"))
 def schur_update_pallas(c: jax.Array, a: jax.Array, b: jax.Array, *,
                         alpha: float = 1.0, beta: float = -1.0,
                         tiles: tuple[int, int, int] | None = None,
-                        interpret: bool = False) -> jax.Array:
+                        interpret: bool = False, out_dtype=None) -> jax.Array:
     """Fused `β·C + α·(A@B)` for (m, n) C, (m, k) A, (k, n) B.
 
     α=1, β=−1 is the paper's `V = A21·III − A22`; α=−1, β=1 is
     `C11 = I − III·C21`. Accumulation is f32 regardless of input dtype; the
-    result is cast to C's dtype. Tile shapes default to `auto_tiles`
+    result is cast to `out_dtype` (default: C's dtype — pass float32 to
+    keep the accumulator un-rounded out of low-precision operands, same
+    contract as `matmul_pallas`). Tile shapes default to `auto_tiles`
     (Mosaic-legal: a multiple-of-128 divisor per dim, else the full dim —
     arbitrary divisors only lower in interpret mode).
     """
@@ -162,7 +165,7 @@ def schur_update_pallas(c: jax.Array, a: jax.Array, b: jax.Array, *,
             pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), c.dtype),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype or c.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),

@@ -44,10 +44,16 @@ def matmul(a: jax.Array, b: jax.Array,
 
 def schur_update(c: jax.Array, a: jax.Array, b: jax.Array, *,
                  alpha: float = 1.0, beta: float = -1.0,
-                 tiles: tuple[int, int, int] | None = None) -> jax.Array:
-    """Fused β·C + α·(A@B) (see kernel.schur_update_pallas)."""
+                 tiles: tuple[int, int, int] | None = None,
+                 out_dtype=None) -> jax.Array:
+    """Fused β·C + α·(A@B) (see kernel.schur_update_pallas).
+
+    out_dtype=float32 keeps the f32 accumulator un-rounded on the flush
+    even for low-precision operands, matching `matmul`.
+    """
     return schur_update_pallas(c, a, b, alpha=alpha, beta=beta, tiles=tiles,
-                               interpret=pallas_interpret_default())
+                               interpret=pallas_interpret_default(),
+                               out_dtype=out_dtype)
 
 
 def blocks_to_dense(blocks: jax.Array) -> jax.Array:
@@ -77,11 +83,12 @@ def grid_matmul(a_blocks: jax.Array, b_blocks: jax.Array) -> jax.Array:
 
 def grid_schur_update(c_blocks: jax.Array, a_blocks: jax.Array,
                       b_blocks: jax.Array, *, alpha: float = 1.0,
-                      beta: float = -1.0) -> jax.Array:
+                      beta: float = -1.0, out_dtype=None) -> jax.Array:
     """Fused β·C + α·(A@B) on (b, b, bs, bs) block grids, one kernel."""
     bs = c_blocks.shape[2]
     out = schur_update(blocks_to_dense(c_blocks), blocks_to_dense(a_blocks),
-                       blocks_to_dense(b_blocks), alpha=alpha, beta=beta)
+                       blocks_to_dense(b_blocks), alpha=alpha, beta=beta,
+                       out_dtype=out_dtype)
     return dense_to_blocks(out, bs)
 
 

@@ -31,14 +31,23 @@ import time
 import jax
 
 from repro.core.costmodel import (DTYPE_BYTES, STRASSEN_CUTOFF, TPU_V5E,
-                                  CostParams, fit_scale, spin_cost,
-                                  strassen_cost, strassen_multiply_counts,
+                                  CostParams, apply_inverse_cost, fit_scale,
+                                  spin_cost, strassen_cost,
+                                  strassen_multiply_counts,
                                   tpu_roofline_cost)
 
 from .plan import Plan, ProblemSignature
 
 __all__ = ["predict_cost", "rank_plans", "measure_plan", "measure_plans",
-           "autotune", "LEAF_SOLVER_RATE", "ENGINE_RATE"]
+           "autotune", "LEAF_SOLVER_RATE", "ENGINE_RATE",
+           "SERVE_HORIZON_COLS"]
+
+# RHS columns a maintained inverse is assumed to serve over its lifetime —
+# the amortization horizon the precision axis prices storage against. A
+# low-precision store pays its certification polish once but saves HBM
+# bytes on EVERY served `apply_inverse` GEMM; with no horizon the one-off
+# polish would always dominate and the planner could never prefer bf16.
+SERVE_HORIZON_COLS = 1024
 
 
 # Relative leaf-inversion rates vs LAPACK getrf/getri, per backend. The
@@ -153,6 +162,30 @@ def predict_cost(sig: ProblemSignature, plan: Plan,
         # one NS sweep = 2 full-size distributed multiplies (2 n^3 MACs)
         sweep = 2 * sig.n**3 * p.t_flop / max(1.0, min(b * b, sig.cores))
     total += plan.refine_sweeps * sweep
+
+    # Precision axis: when the signature carries a policy, the plan is
+    # priced for SERVING, not just factorization — SERVE_HORIZON_COLS
+    # columns of `apply_inverse` against the stored inverse. On TPU the
+    # serve GEMM is HBM-bound (costmodel.apply_inverse_cost), so a bf16
+    # store halves the term and beats exact storage despite its one-off
+    # certification polish. On CPU half-precision is emulated (same 1.5x
+    # penalty as the compute-dtype term above), so exact storage always
+    # wins there and auto_store never picks bf16 off-accelerator.
+    if sig.precision and sig.kind == "inverse":
+        store = plan.store_dtype or sig.dtype
+        if sig.backend == "tpu":
+            chips = max(sig.device_count, 1)
+            t_serve = apply_inverse_cost(
+                sig.n, 1, chips, dtype_bytes=DTYPE_BYTES.get(store, 4))
+        else:
+            p_srv = _cost_params(sig, b, calibration)
+            t_serve = (2 * sig.n**2 * p_srv.t_flop
+                       / max(1.0, min(float(sig.n), sig.cores)))
+            if store in ("bfloat16", "float16", "float8_e4m3fn"):
+                t_serve *= 1.5               # emulated low precision
+        total += SERVE_HORIZON_COLS * t_serve
+        if store != sig.dtype:
+            total += sweep                   # certification polish, one-off
     return float(total)
 
 
@@ -230,7 +263,7 @@ def _calibration_points(measured: list[Plan], sig: ProblemSignature
     for p in measured:
         if (p.leaf_solver == "linalg" and p.multiply_engine == "einsum"
                 and p.compute_dtype == sig.dtype and p.refine_sweeps == 0
-                and p.measured_s is not None):
+                and not p.store_dtype and p.measured_s is not None):
             pts[p.grid(sig.n)] = p.measured_s
     return pts
 
@@ -269,7 +302,7 @@ def autotune(sig: ProblemSignature, candidates: list[Plan], *,
         if not mesh_active and engine in ("allgather", "ring"):
             engine = "einsum"            # SUMMA collapses to einsum off-mesh
         return (p.block_size, p.leaf_solver, p.compute_dtype,
-                p.refine_sweeps, engine)
+                p.refine_sweeps, p.store_dtype, engine)
 
     reps: dict[tuple, Plan] = {}
     for p in short:

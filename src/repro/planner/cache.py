@@ -35,7 +35,14 @@ __all__ = ["PlanCache", "default_cache", "default_cache_path",
 # SPIN). v1 files hold keys with neither dimension — a plan tuned on a
 # 1-device run could silently serve an 8-device mesh — so the whole file is
 # discarded on version mismatch rather than risking stale reuse.
-PLAN_CACHE_VERSION = 2
+# v3: ProblemSignature gained the `precision` axis and Plan the
+# `store_dtype` field (core.precision). A v2 entry's signature dict lacks
+# the axis, so `get`'s sig-dict re-verification would reject it anyway for
+# low-precision lookups — but an EXACT-policy lookup against a v2 file
+# would hit a plan whose candidate space was never expanded/priced along
+# the precision axis. Version mismatch discards the whole file, same rule
+# as v1→v2.
+PLAN_CACHE_VERSION = 3
 
 _ENV_VAR = "SPIN_PLAN_CACHE"
 

@@ -50,6 +50,7 @@ def get_plan(kind: str, n: int, dtype=jnp.float32, *,
              force_replan: bool = False,
              placement: str = "dense",
              update_rank: int = 0,
+             precision=None,
              **enumerate_kw) -> Plan:
     """Select (or recall) the plan for one (kind, n, dtype) problem.
 
@@ -61,11 +62,20 @@ def get_plan(kind: str, n: int, dtype=jnp.float32, *,
     `update_rank` is the online-service axis (accumulated SMW churn a
     re-factorization plan is priced under, see planner.refactor_policy) —
     zero for ordinary offline problems, leaving their cache keys unchanged.
+    `precision` (PrecisionPolicy | preset string | None) puts the policy on
+    the signature: candidates gain store-dtype variants and are priced for
+    serving (autotune.SERVE_HORIZON_COLS); an exact policy leaves the
+    signature — and thus every pre-existing cache key — unchanged.
     """
     if kind not in ("inverse", "solve"):
         raise ValueError(f"unknown plan kind {kind!r}")
+    from repro.core.precision import resolve_precision
+
+    policy = resolve_precision(precision)
     sig = signature_for(kind, n, dtype, placement=placement,
                         update_rank=update_rank,
+                        precision="" if policy.is_exact
+                        else policy.descriptor(),
                         constraint=_constraint_key(enumerate_kw))
     cache = cache or default_cache()
     do_measure = _resolve_measure(measure, n)
@@ -145,9 +155,15 @@ def execute_inverse(plan: Plan, dense: jax.Array,
     from repro.core.spin import spin_inverse_dense
 
     if plan.compute_dtype != dense.dtype.name and plan.refine_sweeps:
-        return _refined_inverse(plan, dense)
-    return spin_inverse_dense(dense, plan.block_size, plan.leaf_solver,
-                              engine=plan.multiply_engine)
+        out = _refined_inverse(plan, dense)
+    else:
+        out = spin_inverse_dense(dense, plan.block_size, plan.leaf_solver,
+                                 engine=plan.multiply_engine)
+    # Precision-axis plans may store the result below the operand dtype
+    # (the maintained-inverse serving representation). "" = operand's own.
+    if plan.store_dtype and plan.store_dtype != out.dtype.name:
+        out = out.astype(plan.store_dtype)
+    return out
 
 
 def execute_solve(plan: Plan, dense: jax.Array, rhs: jax.Array,

@@ -58,6 +58,7 @@ class ProblemSignature:
     mesh: str = ""       # ambient mesh topology ("data2:model2", "" = none)
     placement: str = "dense"  # engine placement: "dense" | "sharded"
     update_rank: int = 0  # accumulated SMW churn the plan is priced under
+    precision: str = ""  # PrecisionPolicy.descriptor() ("" = exact default)
     constraint: str = ""  # e.g. "bs64" when the block grid is pre-fixed
 
     def key(self) -> str:
@@ -69,6 +70,12 @@ class ProblemSignature:
         # Appended only when nonzero so every pre-existing key is unchanged.
         if self.update_rank:
             base += f"/u{self.update_rank}"
+        # The precision axis (core.precision): a plan priced under a
+        # low-precision policy caches under its own key; appended only when
+        # set so exact-policy keys are unchanged. This axis is why the cache
+        # schema bumped to v3 — v2 entries carry signature dicts without it.
+        if self.precision:
+            base += f"/p{self.precision}"
         return f"{base}/{self.constraint}" if self.constraint else base
 
     def as_dict(self) -> dict:
@@ -82,6 +89,7 @@ def signature_for(kind: str, n: int, dtype=jnp.float32, *,
                   mesh: str | None = None,
                   placement: str = "dense",
                   update_rank: int = 0,
+                  precision: str = "",
                   constraint: str = "") -> ProblemSignature:
     """Build the signature for the *current* runtime.
 
@@ -107,6 +115,7 @@ def signature_for(kind: str, n: int, dtype=jnp.float32, *,
                             backend=backend, device_count=int(device_count),
                             cores=int(cores), mesh=mesh, placement=placement,
                             update_rank=int(update_rank),
+                            precision=precision,
                             constraint=constraint)
 
 
@@ -119,6 +128,7 @@ class Plan:
     multiply_engine: str = "einsum"   # one of core.multiply._ENGINES
     compute_dtype: str = "float32"    # dtype the recursion runs in
     refine_sweeps: int = 0            # Newton–Schulz polish sweeps afterwards
+    store_dtype: str = ""             # result storage dtype ("" = operand's)
     grid_axes: tuple[str, str] = ("data", "model")
     # provenance — not part of plan identity for execution purposes
     predicted_s: float | None = None  # cost-model score (seconds)
@@ -131,7 +141,8 @@ class Plan:
     def execution_key(self) -> tuple:
         """Identity of *what runs* (provenance fields excluded)."""
         return (self.block_size, self.leaf_solver, self.multiply_engine,
-                self.compute_dtype, self.refine_sweeps, self.grid_axes)
+                self.compute_dtype, self.refine_sweeps, self.store_dtype,
+                self.grid_axes)
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -222,4 +233,31 @@ def enumerate_plans(sig: ProblemSignature, *,
                                       multiply_engine=engine,
                                       compute_dtype="bfloat16",
                                       refine_sweeps=2))
-    return plans
+    return _store_dtype_variants(sig, plans)
+
+
+def _store_dtype_variants(sig: ProblemSignature, plans: list[Plan]
+                          ) -> list[Plan]:
+    """Expand candidates along the precision axis (`sig.precision`).
+
+    An exact signature passes through untouched. A pinned policy (e.g. the
+    "bf16" preset) rewrites every candidate to store at the pinned dtype —
+    the service will store there regardless, so pricing anything else would
+    rank a plan that never runs. An `auto_store` policy prices BOTH the
+    exact and the low-precision store for each candidate and lets
+    `predict_cost`'s serving-amortization term decide — the path by which
+    `auto=True` *chooses* low-precision serving. Solve-kind and sharded
+    signatures keep exact storage: there is no maintained low-precision
+    operand to store in either case.
+    """
+    if not sig.precision or sig.kind != "inverse" or sig.placement == "sharded":
+        return plans
+    from repro.core.precision import PrecisionPolicy  # late: no cycle
+
+    policy = PrecisionPolicy.from_descriptor(sig.precision)
+    out: list[Plan] = []
+    for p in plans:
+        for store in policy.candidate_store_dtypes(sig.dtype):
+            out.append(p if store == sig.dtype
+                       else dataclasses.replace(p, store_dtype=store))
+    return out

@@ -45,6 +45,22 @@ from .plan import Plan, ProblemSignature, signature_for
 __all__ = ["RefactorDecision", "RefactorPolicy", "smw_update_cost"]
 
 
+def _store_dtype(sig: ProblemSignature) -> str:
+    """Dtype the maintained inverse is resident in — the HBM-traffic dtype.
+
+    A low-precision policy on the signature means the SMW panel products
+    stream a narrower resident operand (bf16 halves the memory term that
+    dominates small-k updates), which shifts the rent-or-buy crossover.
+    """
+    if sig.precision:
+        from repro.core.precision import PrecisionPolicy
+
+        store = PrecisionPolicy.from_descriptor(sig.precision).store_dtype
+        if store:
+            return store
+    return sig.dtype
+
+
 def smw_update_cost(sig: ProblemSignature, k: int,
                     calibration: dict | None = None) -> float:
     """Modeled seconds to fold one rank-k Woodbury update into the inverse.
@@ -60,7 +76,7 @@ def smw_update_cost(sig: ProblemSignature, k: int,
     n = sig.n
     if sig.backend == "tpu":
         chips = max(sig.device_count, 1)
-        bytes_ = DTYPE_BYTES.get(sig.dtype, 4)
+        bytes_ = DTYPE_BYTES.get(_store_dtype(sig), 4)
         flops = (4 * n * n * k + k ** 3) * 2
         t_compute = flops / (chips * TPU_V5E["peak_flops"])
         t_memory = 2 * n * n * bytes_ / (chips * TPU_V5E["hbm_bw"])
@@ -108,7 +124,8 @@ class RefactorPolicy:
         plan = get_plan(sig.kind, sig.n, jnp.dtype(sig.dtype),
                         measure=False, cache=cache,
                         placement=sig.placement,
-                        update_rank=sig.update_rank)
+                        update_rank=sig.update_rank,
+                        precision=sig.precision or None)
         return plan, cache.get_calibration(sig)
 
     def decide(self, n: int, dtype, *, new_rank: int,
@@ -116,12 +133,15 @@ class RefactorPolicy:
                cumulative_s: float = 0.0,
                residual_est: float = 0.0,
                drift_tolerance: float = float("inf"),
-               placement: str = "dense") -> RefactorDecision:
+               placement: str = "dense",
+               precision: str = "") -> RefactorDecision:
         """Fold the next rank-`new_rank` update in, or re-factorize?
 
         pending_rank / cumulative_s: accumulated rank and modeled SMW spend
         since the last factorization (the service's ledger). residual_est /
         drift_tolerance: the drift tracker's probe estimate and bound.
+        `precision` (a PrecisionPolicy descriptor, "" = exact) prices both
+        sides at the policy's resident store dtype.
         """
         from .autotune import predict_cost  # late: avoids import cycle
 
@@ -130,7 +150,7 @@ class RefactorPolicy:
         # fetched under (see module docstring on why not the exact rank).
         bucket = 1 << max(total_rank - 1, 0).bit_length()
         sig = signature_for("inverse", n, dtype, placement=placement,
-                            update_rank=bucket)
+                            update_rank=bucket, precision=precision)
         plan, calibration = self._plan_for(sig)
         smw_s = smw_update_cost(sig, int(new_rank), calibration)
         refactor_s = predict_cost(sig, plan, calibration)
@@ -150,7 +170,8 @@ class RefactorPolicy:
                                 cumulative_s=cumulative, plan=plan)
 
     def reinversion_cost(self, n: int, dtype, *,
-                         placement: str = "dense") -> float:
+                         placement: str = "dense",
+                         precision: str = "") -> float:
         """Modeled seconds of a fresh planned inversion of an (n, n)
         matrix — the price `SpinService`'s cost-aware eviction uses: a
         matrix that is expensive to re-factorize is expensive to get
@@ -159,7 +180,8 @@ class RefactorPolicy:
         under the offline signature (no churn axis)."""
         from .autotune import predict_cost  # late: avoids import cycle
 
-        sig = signature_for("inverse", n, dtype, placement=placement)
+        sig = signature_for("inverse", n, dtype, placement=placement,
+                            precision=precision)
         plan, calibration = self._plan_for(sig)
         return float(predict_cost(sig, plan, calibration))
 

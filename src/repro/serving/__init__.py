@@ -1,3 +1,6 @@
+from repro.core.precision import (PrecisionPolicy, PRECISION_PRESETS,
+                                  resolve_precision)
+
 from .admission import AdmissionConfig, AdmissionRejected, Rejection
 from .engine import Request, ServingEngine
 from .metrics import PhaseLedger, Reservoir, ServiceMetrics
@@ -8,4 +11,7 @@ __all__ = ["Request", "ServingEngine",
            "SpinService", "SolveRequest", "UpdateRequest", "MatrixState",
            "ResidencyBusy",
            "AdmissionConfig", "AdmissionRejected", "Rejection",
-           "ServiceMetrics", "Reservoir", "PhaseLedger"]
+           "ServiceMetrics", "Reservoir", "PhaseLedger",
+           # precision rides along: the serve-precision half of the API
+           # lives in core but is part of the serving surface
+           "PrecisionPolicy", "PRECISION_PRESETS", "resolve_precision"]

@@ -120,6 +120,10 @@ class ServiceMetrics:
         self.solve_s = Reservoir(window)
         self.total_s = Reservoir(window)
         self.queue_depth = Reservoir(window)
+        # served-residual distribution: populated by requests that REPORT a
+        # residual (low-precision certified serving, degraded sketches) —
+        # the accuracy half of the SLA dashboard next to the latency half
+        self.residual = Reservoir(window)
         self.counters: dict[str, int] = {}
 
     def count(self, name: str, k: int = 1) -> None:
@@ -133,6 +137,8 @@ class ServiceMetrics:
         (requests that never got a slot — rejected/shed — only count)."""
         if req.path is not None:
             self.count(f"path_{req.path}")
+        if getattr(req, "residual_est", None) is not None:
+            self.residual.record(float(req.residual_est))
         if req.admit_t is None or req.finish_t is None:
             return
         self.queue_wait_s.record(req.admit_t - req.submit_t)
@@ -150,6 +156,7 @@ class ServiceMetrics:
                           "solve": self.solve_s.summary(),
                           "total": self.total_s.summary()},
             "queue_depth": self.queue_depth.summary(),
+            "residual": self.residual.summary(),
             "counters": dict(self.counters),
         }
 

@@ -35,6 +35,24 @@ the maintained inverse a request-serving object:
     point, bitwise-identical to the offline call on the same stacked
     panel. Once SMW updates have been folded in, solves come from the
     maintained inverse in O(n²·c) (`core.update.apply_inverse`);
+  * **low-precision fast path** (`core.precision.PrecisionPolicy`) — a
+    matrix admitted under a low-precision policy (`add_matrix(...,
+    precision="bf16")`, a policy object, or the service/env default)
+    keeps its maintained inverse in the policy's STORE dtype and serves
+    every request straight from it through the policy's compute dtype
+    with f32 accumulation — one memory-bound GEMM at half (bf16) or a
+    quarter (fp8 storage hook) of the HBM bytes, never the recursion.
+    The serve error is CERTIFIED: after factorization and after every
+    SMW fold the service probes the residual through the SAME
+    low-precision GEMM it serves with (`estimate_inverse_residual(
+    precision=...)`) and, only when the probe exceeds the policy's bound,
+    fires Newton–Schulz polish sweeps (f32 compute, recast to the store
+    dtype) until it is back under the bound (or the policy's give-up
+    cap). The certified residual is reported on each request
+    (`SolveRequest.residual_est`) exactly like degraded mode reports its
+    sketch residual, and `polish_triggers`/`polish_sweeps` land in
+    `stats`/`metrics()`. Low-precision serving is dense-only: sharded
+    placement with a non-exact policy is rejected at `add_matrix`;
   * **incremental updates** — rank-k mutations and block row/column
     replacements (`UpdateRequest`) are folded into the maintained inverse
     by Woodbury identity in O(n²k) (`core.update.smw_update_inverse`),
@@ -94,6 +112,7 @@ priorities clamped so the per-matrix order is preserved — see
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 import tempfile
 import time
@@ -104,6 +123,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.blockmatrix import BlockMatrix
+from repro.core.precision import PrecisionPolicy, resolve_precision
 from repro.core.solver_ckpt import validate_snapshot_key as \
     _validate_snapshot_key
 from repro.core.solve import (sketched_approx_inverse, spin_solve_dense,
@@ -129,6 +149,19 @@ class ResidencyBusy(RuntimeError):
     candidate is momentarily hot (live slot, queued request, background
     work). Admission defers the request and retries next tick — this is
     NOT a failure, unlike an `OSError` from the spill/rehydrate I/O."""
+
+
+@functools.partial(jax.jit, static_argnames=("sweeps",))
+def _ns_polish_dense(a: jax.Array, x: jax.Array, sweeps: int) -> jax.Array:
+    """`sweeps` Newton–Schulz iterations X ← X(2I − AX) in f32 on a dense
+    pair — the certification polish for low-precision maintained inverses.
+    Returns f32; the caller recasts to the policy's store dtype."""
+    a32 = a.astype(jnp.float32)
+    x32 = x.astype(jnp.float32)
+    eye2 = 2.0 * jnp.eye(a.shape[0], dtype=jnp.float32)
+    for _ in range(sweeps):
+        x32 = x32 @ (eye2 - a32 @ x32)
+    return x32
 
 
 @dataclasses.dataclass
@@ -198,6 +231,12 @@ class MatrixState:
     smw_spent_s: float = 0.0         # modeled SMW spend since last factorize
     smw_applied: int = 0
     refactors: int = 0
+    # low-precision serving (core.precision.PrecisionPolicy)
+    precision: str = ""              # pinned policy descriptor; "" = exact
+    store_dtype: str = ""            # maintained-inverse dtype ("" = operand)
+    serve_bound: float = 0.0         # certified residual bound when lowp
+    polish_triggers: int = 0         # certifications that needed polish
+    polish_sweeps: int = 0           # total NS sweeps those firings ran
     # straggler/degraded-mode state (DESIGN.md §10)
     rank: int = 0                    # fault-plan rank of this matrix's shard
     degraded: bool = False
@@ -229,12 +268,16 @@ class SpinService:
                  spill_dir: str | None = None,
                  metrics_window: int = 4096,
                  clock=time.monotonic,
-                 compile_cache: str | bool | None = None):
+                 compile_cache: str | bool | None = None,
+                 precision=None):
         from repro.compat import enable_compilation_cache
         from repro.planner import RefactorPolicy  # late: planner is optional
 
         self.slots = slots
         self.policy = policy or RefactorPolicy()
+        # Service-default precision for add_matrix(precision=None): a
+        # PrecisionPolicy, preset string, or None (per-matrix env/exact).
+        self.precision = precision
         self.drift_probes = drift_probes         # 0 disables probe estimates
         self.drift_scale = drift_scale
         # Straggler guard: None deadline + None fault_plan keeps the exact
@@ -274,18 +317,29 @@ class SpinService:
                       "degraded_serves": 0, "shard_timeouts": 0,
                       "shard_failures": 0, "retries": 0, "recoveries": 0,
                       "rejected": 0, "shed": 0, "batch_failures": 0,
-                      "evictions": 0, "rehydrations": 0}
+                      "evictions": 0, "rehydrations": 0,
+                      "lowp_serves": 0, "polish_triggers": 0,
+                      "polish_sweeps": 0}
 
     # -- matrix admission ----------------------------------------------------
 
     def add_matrix(self, matrix_id: str, a, *, block_size: int | None = None,
                    leaf_solver: str | None = None, engine: str | None = None,
-                   sharded: bool = False) -> MatrixState:
+                   sharded: bool = False, precision=None) -> MatrixState:
         """Admit a matrix: plan its configuration, factorize, hold resident.
 
         `a`: dense (n, n) SPD array, or a `ShardedBlockMatrix` (implies
         sharded placement). Explicit block_size / leaf_solver / engine
         override the planner, mirroring the offline entry points.
+
+        `precision` (PrecisionPolicy | preset string | None) selects this
+        matrix's serve precision; None falls back to the service default,
+        then $SPIN_PRECISION, then exact. A non-exact policy rides the
+        planner signature (the plan prices bf16 storage in the roofline —
+        with `auto` the PLANNER decides whether low-precision serving
+        wins), the maintained inverse is held at the resolved store dtype,
+        and serving is certified against the policy's residual bound.
+        Dense placement only: sharded serving stays exact.
         """
         from repro.parallel.sharded_blockmatrix import ShardedBlockMatrix
         from repro.planner import get_plan
@@ -310,23 +364,50 @@ class SpinService:
         else:
             n, dtype = a.shape[0], a.dtype
         placement = "sharded" if sharded else "dense"
+        pol = resolve_precision(
+            precision if precision is not None else self.precision)
+        if not pol.is_exact and placement == "sharded":
+            raise ValueError(
+                "low-precision serving is dense-only: sharded placement "
+                "keeps the exact path (pass precision=None/'exact')")
         kw = {"block_sizes": (int(block_size),)} if block_size else {}
         plan = get_plan("inverse", n, dtype, measure=False,
-                        placement=placement, **kw)
+                        placement=placement,
+                        precision=None if pol.is_exact else pol, **kw)
         block_size = block_size or plan.block_size
         if isinstance(a, BlockMatrix) and not isinstance(
                 a, ShardedBlockMatrix):
             a = a.to_dense()
         if sharded and not isinstance(a, ShardedBlockMatrix):
             a = ShardedBlockMatrix.from_dense(a, block_size)
+        # Pin the policy's store decision: the plan's store_dtype is the
+        # planner's (cost-priced) choice — for auto_store policies this is
+        # where "should this matrix serve low-precision?" gets decided.
+        op_name = jnp.dtype(dtype).name
+        store = plan.store_dtype or (pol.store_dtype or "")
+        if store == op_name:
+            store = ""
+        active = not pol.is_exact and (
+            bool(store) or pol.resolve_compute(dtype) != op_name)
+        if active:
+            eff = dataclasses.replace(pol, store_dtype=store or None,
+                                      auto_store=False)
+            drift = DriftTracker(
+                tolerance=self.drift_scale * eff.bound(dtype))
+        else:
+            eff = None
+            drift = DriftTracker.for_dtype(dtype, scale=self.drift_scale)
         state = MatrixState(
             matrix_id=matrix_id, a=a, inv=None, placement=placement,
             block_size=int(block_size),
             leaf_solver=leaf_solver or plan.leaf_solver,
             engine=engine or plan.multiply_engine, plan=plan,
-            drift=DriftTracker.for_dtype(dtype, scale=self.drift_scale),
-            n=int(n), dtype=jnp.dtype(dtype),
+            drift=drift, n=int(n), dtype=jnp.dtype(dtype),
             rank=len(self._matrices) + len(self._evicted))
+        if eff is not None:
+            state.precision = eff.descriptor()
+            state.store_dtype = store
+            state.serve_bound = eff.bound(dtype)
         state.reinvert_cost_s = self._reinvert_cost(state)
         self._make_room(protect={matrix_id})
         self._factorize(state)
@@ -349,16 +430,70 @@ class SpinService:
     def _factorize(self, state: MatrixState) -> None:
         """(Re)compute the maintained inverse. Dispatch only — XLA executes
         asynchronously, so the scheduler keeps ticking while the inversion
-        runs; the first consumer of `state.inv` synchronizes on it."""
+        runs; the first consumer of `state.inv` synchronizes on it. A
+        low-precision matrix additionally CERTIFIES the fresh inverse (one
+        probe, polish only if the probe exceeds the bound) — that probe is
+        the one synchronization lowp factorization pays."""
         if state.placement == "sharded":
             state.inv = spin_inverse_sharded(
                 state.a, leaf_solver=state.leaf_solver, engine=state.engine)
+        elif state.precision:
+            state.inv = spin_inverse_dense(
+                state.a, state.block_size, state.leaf_solver,
+                engine=state.engine, precision=self._policy_of(state))
         else:
             state.inv = spin_inverse_dense(
                 state.a, state.block_size, state.leaf_solver,
                 engine=state.engine)
         state.drift.reset()
         state.smw_spent_s = 0.0
+        if state.precision:
+            self._certify(state)
+
+    # -- low-precision certification -----------------------------------------
+
+    def _policy_of(self, state: MatrixState) -> PrecisionPolicy | None:
+        """The matrix's pinned PrecisionPolicy (None for exact serving)."""
+        if not state.precision:
+            return None
+        return PrecisionPolicy.from_descriptor(state.precision)
+
+    def _probe(self, state: MatrixState, policy: PrecisionPolicy) -> float:
+        """Residual probe through the SAME low-precision GEMM the policy
+        serves with — an f32 probe would under-report what requests see."""
+        self._key, sub = jax.random.split(self._key)
+        return estimate_inverse_residual(
+            lambda p: apply_inverse(state.a, p), state.inv, sub, state.n,
+            probes=max(1, self.drift_probes), precision=policy)
+
+    def _certify(self, state: MatrixState) -> float:
+        """Certify the low-precision maintained inverse: probe the served
+        residual, and only while it exceeds the policy's bound fire
+        Newton–Schulz polish (f32 sweeps, recast to the store dtype) up to
+        the policy's give-up cap. The final probe value becomes the
+        per-request reported residual (`drift.residual_est`)."""
+        policy = self._policy_of(state)
+        res = self._probe(state, policy)
+        fired = False
+        sweeps_run = 0
+        while (res > state.serve_bound and policy.polish_sweeps > 0
+               and sweeps_run < policy.max_polish_sweeps):
+            fired = True
+            k = min(policy.polish_sweeps,
+                    policy.max_polish_sweeps - sweeps_run)
+            state.inv = _ns_polish_dense(
+                state.a, state.inv, k).astype(state.inv.dtype)
+            sweeps_run += k
+            res = self._probe(state, policy)
+        if fired:
+            state.polish_triggers += 1
+            state.polish_sweeps += sweeps_run
+            self.stats["polish_triggers"] += 1
+            self.stats["polish_sweeps"] += sweeps_run
+            self._metrics.count("polish_triggers")
+            self._metrics.count("polish_sweeps", sweeps_run)
+        state.drift.residual_est = res
+        return res
 
     # -- residency (cost-aware LRU over resident matrices) -------------------
 
@@ -766,6 +901,16 @@ class SpinService:
         """
         if state.degraded:
             self._poll_background(state)
+        if state.precision and not state.degraded:
+            # Low-precision fast path: EVERY request (churned or not)
+            # serves from the maintained store-dtype inverse through the
+            # policy's compute/accumulate GEMM — one memory-bound panel
+            # product, never the recursion. The certified probe residual
+            # rides each request like degraded mode's sketch residual.
+            self.stats["lowp_serves"] += 1
+            return (apply_inverse(state.inv, rhs,
+                                  precision=self._policy_of(state)),
+                    "maintained", state.drift.residual_est)
         if state.pending_rank == 0 and not state.degraded:
             if self.solve_deadline_s is None and self.fault_plan is None:
                 return self._exact_solve(state, rhs), "recursion", None
@@ -879,7 +1024,11 @@ class SpinService:
             state.smw_spent_s = decision.cumulative_s
             state.smw_applied += 1
             self.stats["updates_smw"] += 1
-            if self.drift_probes:
+            if state.precision:
+                # the low-precision certify IS the drift probe, plus the
+                # polish-on-exceed repair the exact path never needs
+                self._certify(state)
+            elif self.drift_probes:
                 self._key, sub = jax.random.split(self._key)
                 state.drift.residual_est = estimate_inverse_residual(
                     lambda p: apply_inverse(state.a, p), state.inv, sub,
@@ -905,6 +1054,10 @@ class SpinService:
                       "residual_est": st.drift.residual_est},
             "smw_spent_s": st.smw_spent_s,
             "smw_applied": st.smw_applied, "refactors": st.refactors,
+            "precision": st.precision, "store_dtype": st.store_dtype,
+            "serve_bound": st.serve_bound,
+            "polish_triggers": st.polish_triggers,
+            "polish_sweeps": st.polish_sweeps,
         }
         if st.placement == "sharded":
             pair = {"a": st.a.to_blockmatrix(),
@@ -933,6 +1086,12 @@ class SpinService:
             dtype=jnp.dtype(m["dtype"]),
             smw_spent_s=m["smw_spent_s"],
             smw_applied=m["smw_applied"], refactors=m["refactors"])
+        # .get(): pre-precision snapshots restore as exact-serving states
+        st.precision = m.get("precision", "")
+        st.store_dtype = m.get("store_dtype", "")
+        st.serve_bound = m.get("serve_bound", 0.0)
+        st.polish_triggers = m.get("polish_triggers", 0)
+        st.polish_sweeps = m.get("polish_sweeps", 0)
         st.reinvert_cost_s = self._reinvert_cost(st)
         return st
 
@@ -974,6 +1133,10 @@ class SpinService:
                     "max_queue": self.admission.max_queue,
                     "per_matrix_quota": self.admission.per_matrix_quota,
                 },
+                # service-default precision (per-matrix policies live in
+                # each matrix entry; this only seeds future add_matrix)
+                "precision": ("" if self.precision is None else
+                              resolve_precision(self.precision).descriptor()),
                 "residency": {"max_resident": self.max_resident},
                 "matrices": {}}
         matrices: dict[str, dict[str, BlockMatrix]] = {}
@@ -1030,7 +1193,10 @@ class SpinService:
         if fault_plan is not None:
             guard["fault_plan"] = FaultPlan.from_json(fault_plan)
         kwargs = {**guard, **meta.get("admission", {}),
-                  **meta.get("residency", {}), **overrides}
+                  **meta.get("residency", {})}
+        if meta.get("precision"):
+            kwargs["precision"] = meta["precision"]
+        kwargs.update(overrides)
         svc = cls(slots=meta["slots"], policy=policy,
                   drift_probes=meta["drift_probes"],
                   drift_scale=meta["drift_scale"], seed=seed, **kwargs)
