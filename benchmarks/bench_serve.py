@@ -73,6 +73,8 @@ def run(emit, *, n: int = N, requests: int = REQUESTS, slots: int = SLOTS,
     import jax.numpy as jnp
 
     from repro.core import testing
+    from repro.obs.registry import default_registry
+    from repro.obs.trace import tracing
     from repro.planner import RefactorPolicy
     from repro.serving import AdmissionRejected, PhaseLedger, SpinService
 
@@ -117,6 +119,27 @@ def run(emit, *, n: int = N, requests: int = REQUESTS, slots: int = SLOTS,
     emit(csv_row(f"serve/solve_maintained/n{n}", dt / requests,
                  f"req_per_s={requests / dt:.1f}"))
     f32_rps = requests / dt
+
+    # -- tracing overhead: the same maintained drain under $SPIN_TRACE ------
+    # Off-is-free is proven structurally (tests/test_obs_overhead.py checks
+    # jaxpr equality), so the off point IS the row above; this row measures
+    # the ON cost end-to-end so a regression in the host-side span path
+    # shows up as a throughput delta. WARN-only: tracing is a debugging
+    # mode, not a serving SLA.
+    with ledger.profile("solve_traced"):
+        with tracing(True, clear=True):
+            dt_traced = _drain_requests(svc, "bench", panels)
+    traced_rps = requests / dt_traced
+    note = (f"req_per_s={traced_rps:.1f};untraced={f32_rps:.1f}"
+            if traced_rps >= 0.8 * f32_rps else
+            f"WARN req_per_s={traced_rps:.1f} < 80% of "
+            f"untraced {f32_rps:.1f}")
+    emit(csv_row(f"serve/tracing_overhead/n{n}", dt_traced / requests, note))
+    points.append({"id": f"serve/tracing_overhead/n{n}", "n": n,
+                   "requests": requests,
+                   "untraced_req_per_s": f32_rps,
+                   "traced_req_per_s": traced_rps,
+                   "overhead_gate": "warn"})
 
     # -- low-precision fast path: bf16 store, identical churn ---------------
     # Same matrix, same folded update, same panels — the only axis that
@@ -233,6 +256,7 @@ def run(emit, *, n: int = N, requests: int = REQUESTS, slots: int = SLOTS,
                                 "first_request_s": first_request_s},
               "phases": ledger.to_dict(),
               "metrics": metrics,
+              "registry": default_registry().to_json(),
               "points": points}
     write_json_report(report, json_path, emit, "serve")
     return report

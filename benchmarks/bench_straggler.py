@@ -42,6 +42,7 @@ def run(emit, *, n: int = N, requests: int = REQUESTS,
 
     from repro.core import testing
     from repro.core.verify import residual_tolerance
+    from repro.obs.registry import default_registry
     from repro.parallel.straggler import (CodedConfig, FaultPlan,
                                           coded_inverse)
     from repro.serving import SpinService
@@ -97,9 +98,14 @@ def run(emit, *, n: int = N, requests: int = REQUESTS,
                  f"req_per_s={requests / dt:.1f};"
                  f"residual_est={residual_est:.2e}"))
 
+    # Every coded_inverse above published spin_coded_* series (runs,
+    # stragglers, retries, decode failures, wall-clock histogram) to the
+    # metrics registry; snapshot them so the JSON report carries the same
+    # counters a scraped production run would.
     report = {"benchmark": "straggler", "backend": jax.default_backend(),
               "n": n, "workers": WORKERS,
               "residual_tolerance": residual_tolerance(a.dtype),
+              "metrics": {"registry": default_registry().to_json()},
               "points": points}
     write_json_report(report, json_path, emit, "straggler")
     return report

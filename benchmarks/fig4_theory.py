@@ -17,6 +17,10 @@ import numpy as np
 
 from repro.core import spin_inverse_dense, testing
 from repro.core.costmodel import CostParams, fit_scale, spin_cost
+from repro.obs import ledger as obs_ledger
+from repro.obs.ledger import CostLedger
+from repro.obs.trace import tracing
+from repro.planner import plan_inverse
 
 from .common import (bench_arg_parser, csv_row, emit_header, time_fn,
                      write_json_report)
@@ -60,9 +64,39 @@ def run(emit, *, n=N, splits=SPLITS, json_path: str | None = None) -> dict:
                      f"pred_us={pred * 1e6:.1f};{held};rel_err={rel:.2f}"))
     mean_err = float(np.mean(errs))
     emit(f"fig4/mean_rel_err,,{mean_err:.3f}")
+    ledger_report = _traced_ledger_report(emit, a, n, splits)
     write_json_report({"benchmark": "fig4_theory", "points": points,
-                       "mean_rel_err": mean_err}, json_path, emit, "fig4")
+                       "mean_rel_err": mean_err, "ledger": ledger_report},
+                      json_path, emit, "fig4")
     return out
+
+
+def _traced_ledger_report(emit, a, n: int, splits) -> dict:
+    """Theory-vs-practice through the observability path: each split runs
+    once under $SPIN_TRACE via the planner, so the cost ledger pairs the
+    model's live prediction with the synchronized wall clock — the same
+    modeled/measured ratio a traced production run would report."""
+    prev = obs_ledger.set_ledger(CostLedger())
+    try:
+        with tracing(True):
+            for b in splits:
+                bs = n // b
+                if bs < 16:
+                    continue
+                plan_inverse(a, measure=False, block_sizes=(bs,))
+        entries = [e.to_dict() for e in obs_ledger.ledger().entries("inverse")]
+        for e in entries:
+            ratio = e["ratio"]
+            emit(csv_row(f"fig4/ledger/n{n}/b{e['b']}", e["measured_s"],
+                         f"pred_us={e['predicted_s'] * 1e6:.1f};"
+                         f"ratio={ratio:.3f}" if ratio is not None
+                         else "pred=none"))
+        summary = obs_ledger.ledger().summary()
+        if summary["mean_ratio"] is not None:
+            emit(f"fig4/ledger/mean_ratio,,{summary['mean_ratio']:.3f}")
+        return {"entries": entries, "summary": summary}
+    finally:
+        obs_ledger.set_ledger(prev)
 
 
 def main() -> None:

@@ -172,7 +172,9 @@ def enable_compilation_cache(cache_dir: str | None = None) -> str | None:
     versions, so each update is tolerated individually — on a version
     missing a knob the cache still works with that default.
     """
-    cache_dir = cache_dir or os.environ.get("SPIN_COMPILE_CACHE")
+    from repro import envconfig
+
+    cache_dir = cache_dir or envconfig.env_str("SPIN_COMPILE_CACHE")
     if not cache_dir:
         return None
     os.makedirs(cache_dir, exist_ok=True)

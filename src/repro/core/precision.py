@@ -33,7 +33,6 @@ not an API change.
 from __future__ import annotations
 
 import dataclasses
-import os
 import warnings
 
 __all__ = ["PrecisionPolicy", "PRECISION_PRESETS", "resolve_precision",
@@ -180,8 +179,10 @@ class PrecisionPolicy:
         if isinstance(precision, cls):
             return precision
         if precision is None:
-            env = os.environ.get(DEFAULT_PRECISION_ENV, "").strip()
-            if not env:
+            from repro import envconfig
+
+            env = envconfig.env_str(DEFAULT_PRECISION_ENV)
+            if env is None:
                 return PRECISION_PRESETS["exact"]
             precision = env
         if not isinstance(precision, str):
@@ -192,9 +193,11 @@ class PrecisionPolicy:
 
 
 def _apply_field_env(policy: PrecisionPolicy) -> PrecisionPolicy:
+    from repro import envconfig
+
     overrides = {}
     for field, var in _FIELD_ENV.items():
-        raw = os.environ.get(var)
+        raw = envconfig.env_raw(var)
         if raw is None:
             continue
         overrides[field] = (float(raw) if field == "tolerance"

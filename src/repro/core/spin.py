@@ -35,6 +35,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.obs.trace import TRACER as _TRACER
+
 from .blockmatrix import BlockMatrix, _bump
 from .multiply import (multiply, multiply_engine, multiply_subtract,
                        subtract_multiply, validate_engine)
@@ -132,7 +134,8 @@ def _lowp_inverse_blocks(a: BlockMatrix, leaf_solver: str,
 
 
 def spin_inverse(a: BlockMatrix, *, leaf_solver: str = "linalg",
-                 auto: bool = False, precision=None) -> BlockMatrix:
+                 auto: bool = False, precision=None,
+                 _level: int = 0) -> BlockMatrix:
     """Distributed Strassen inversion of a BlockMatrix (grid must be 2^m).
 
     auto=True consults the planner (repro.planner) for the leaf solver —
@@ -142,6 +145,12 @@ def spin_inverse(a: BlockMatrix, *, leaf_solver: str = "linalg",
     recursion at the policy's compute dtype, polishes with Newton–Schulz in
     f32, and returns blocks at the policy's store dtype; the default is
     bitwise-unchanged.
+
+    `_level` threads the recursion depth to the span tracer (repro.obs):
+    under $SPIN_TRACE each internal node and leaf emits a
+    kind="recursion_level" span at trace time. With tracing off the only
+    cost is one attribute check per node — nothing reaches the compiled
+    program either way.
     """
     if auto:
         from repro.planner import planned_leaf_solver
@@ -157,24 +166,42 @@ def spin_inverse(a: BlockMatrix, *, leaf_solver: str = "linalg",
     if b & (b - 1):
         raise ValueError(f"grid must be a power of two, got {b}")
     if b == 1:
+        if _TRACER.enabled:
+            _TRACER.event("spin.leaf", "recursion_level", level=_level,
+                          grid=1, op="leaf", solver=leaf_solver,
+                          block_size=a.block_size,
+                          dtype=str(a.blocks.dtype))
         return leaf_inverse(a, solver=leaf_solver)
 
-    a11, a12, a21, a22 = a.split()
-    i_ = spin_inverse(a11, leaf_solver=leaf_solver)       # I   = A11^-1
-    ii = multiply(a21, i_)                                # II  = A21 I
-    iii = multiply(i_, a12)                               # III = I A12
-    # IV = A21·III and V = IV − A22 (= −Schur) as ONE fused Schur update:
-    # bitwise-identical multiply-then-subtract on the XLA engines, a single
-    # Pallas kernel under engine="pallas". Op counts book 1 multiply +
-    # 1 subtract either way.
-    v = multiply_subtract(a21, iii, a22)
-    vi = spin_inverse(v, leaf_solver=leaf_solver)         # VI  = V^-1
-    c12 = multiply(iii, vi)
-    c21 = multiply(vi, ii)
-    # VII = III·C21 and C11 = I − VII, same fused Schur-update contract.
-    c11 = subtract_multiply(i_, iii, c21)
-    c22 = vi.neg()                                        # scalarMul(VI, -1)
-    return BlockMatrix.arrange(c11, c12, c21, c22)
+    if _TRACER.enabled:
+        from .multiply import current_engine
+
+        span_ctx = _TRACER.span(
+            "spin.level", "recursion_level", named_scope=True,
+            level=_level, grid=b, op="inverse_node",
+            block_size=a.block_size, dtype=str(a.blocks.dtype),
+            engine=current_engine() or "einsum")
+    else:
+        span_ctx = contextlib.nullcontext()
+    with span_ctx:
+        a11, a12, a21, a22 = a.split()
+        i_ = spin_inverse(a11, leaf_solver=leaf_solver,
+                          _level=_level + 1)              # I   = A11^-1
+        ii = multiply(a21, i_)                            # II  = A21 I
+        iii = multiply(i_, a12)                           # III = I A12
+        # IV = A21·III and V = IV − A22 (= −Schur) as ONE fused Schur
+        # update: bitwise-identical multiply-then-subtract on the XLA
+        # engines, a single Pallas kernel under engine="pallas". Op counts
+        # book 1 multiply + 1 subtract either way.
+        v = multiply_subtract(a21, iii, a22)
+        vi = spin_inverse(v, leaf_solver=leaf_solver,
+                          _level=_level + 1)              # VI  = V^-1
+        c12 = multiply(iii, vi)
+        c21 = multiply(vi, ii)
+        # VII = III·C21 and C11 = I − VII, same fused Schur-update contract.
+        c11 = subtract_multiply(i_, iii, c21)
+        c22 = vi.neg()                                    # scalarMul(VI, -1)
+        return BlockMatrix.arrange(c11, c12, c21, c22)
 
 
 @functools.partial(jax.jit,

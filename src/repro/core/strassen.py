@@ -56,13 +56,13 @@ the BlockMatrix-level counters (multiplies/subtracts/...) stay engine-blind.
 from __future__ import annotations
 
 import functools
-import os
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
 from repro import compat
+from repro.obs.trace import TRACER as _TRACER
 
 from .blockmatrix import _bump, assemble_quadrants
 from .costmodel import STRASSEN_CUTOFF
@@ -81,14 +81,10 @@ def strassen_cutoff() -> int:
     SPIN_STRASSEN_CUTOFF env var overrides it — subject to the trace-time
     caveat in the module docstring.
     """
-    raw = os.environ.get(STRASSEN_CUTOFF_ENV, "").strip()
-    if not raw:
-        return STRASSEN_CUTOFF
-    try:
-        return max(int(raw), 0)
-    except ValueError:
-        raise ValueError(
-            f"{STRASSEN_CUTOFF_ENV} must be an integer, got {raw!r}")
+    from repro import envconfig
+
+    raw = envconfig.env_int(STRASSEN_CUTOFF_ENV)
+    return STRASSEN_CUTOFF if raw is None else max(raw, 0)
 
 
 # ---------------------------------------------------------------------------
@@ -171,7 +167,14 @@ def strassen_matmul_blocks(a: jax.Array, b: jax.Array, *,
     g, bs = a.shape[0], a.shape[2]
     if g == 1 or g * bs <= cutoff:
         _bump("strassen_base_multiplies")
+        if _TRACER.enabled:
+            _TRACER.event("strassen.base", "strassen_level", grid=g,
+                          block_size=bs, n=g * bs, op="classical_leaf")
         return (base or _default_base_blocks)(a, b)
+    if _TRACER.enabled:
+        _TRACER.event("strassen.split", "strassen_level", grid=g,
+                      block_size=bs, n=g * bs, cutoff=cutoff,
+                      op="seven_multiply_split")
     if g % 2:
         ap = _pad_grid(a, "strassen_pad")
         bp = _pad_grid(b, "strassen_pad")

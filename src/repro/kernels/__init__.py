@@ -23,7 +23,6 @@ flipping it mid-process only affects direct kernel-wrapper calls and entry
 points that have not been traced yet.
 """
 
-import os
 
 import jax
 
@@ -40,7 +39,11 @@ def pallas_interpret_default() -> bool:
     subject to the trace-time caveat in the module docstring: already-
     compiled outer jit executables keep the value they were traced with.
     """
-    flag = os.environ.get(PALLAS_INTERPRET_ENV, "").strip().lower()
-    if flag in ("1", "true", "yes", "on"):
+    from repro import envconfig
+
+    # A truthy flag forces interpret mode; unset (or explicit false) falls
+    # back to the backend check — same either way, so "0" keeps meaning
+    # "decide from the backend", as it always has.
+    if envconfig.env_bool(PALLAS_INTERPRET_ENV):
         return True
     return jax.default_backend() != "tpu"

@@ -23,7 +23,6 @@ path the chaos tests exercise deterministically.
 from __future__ import annotations
 
 import dataclasses
-import os
 
 import jax
 
@@ -97,11 +96,13 @@ def init_distributed(*, coordinator_address: str | None = None,
     process; single-process callers (tests, the fake-device mesh) get a
     WorkerInfo without any distributed init.
     """
-    coordinator = coordinator_address or os.environ.get("SPIN_COORDINATOR")
-    nprocs = num_processes if num_processes is not None else int(
-        os.environ.get("SPIN_NUM_PROCS", "1"))
-    pid = process_id if process_id is not None else int(
-        os.environ.get("SPIN_PROC_ID", "0"))
+    from repro import envconfig
+
+    coordinator = coordinator_address or envconfig.env_str("SPIN_COORDINATOR")
+    nprocs = (num_processes if num_processes is not None
+              else envconfig.env_int("SPIN_NUM_PROCS", 1))
+    pid = (process_id if process_id is not None
+           else envconfig.env_int("SPIN_PROC_ID", 0))
     if coordinator and nprocs > 1:
         jax.distributed.initialize(coordinator_address=coordinator,
                                    num_processes=nprocs, process_id=pid,

@@ -1,0 +1,30 @@
+"""Unified observability layer (DESIGN.md §13).
+
+Four pieces, one import surface:
+
+  * `trace`    — structured span tracer ($SPIN_TRACE), zero-overhead off.
+  * `registry` — counters/gauges/histograms; Prometheus text + JSON export.
+  * `flight`   — bounded ring-buffer flight recorder, JSONL dumps on
+                 failures to $SPIN_TRACE_DIR.
+  * `ledger`   — modeled-vs-measured cost ledger feeding `fit_scale`
+                 calibration and observed straggle rates back to the planner.
+
+Import-light by contract: importing `repro.obs` must not import jax (the
+tracer and registry are consulted by modules that run before jax config).
+"""
+
+from . import flight, ledger, registry, trace
+from .flight import FlightRecorder, recorder
+from .ledger import CostLedger, LedgerEntry, StraggleStats
+from .ledger import ledger as cost_ledger
+from .registry import (Counter, Gauge, Histogram, MetricsRegistry,
+                       default_registry)
+from .trace import TRACER, Span, SpanTracer, trace_enabled, tracing
+
+__all__ = [
+    "trace", "registry", "flight", "ledger",
+    "TRACER", "Span", "SpanTracer", "trace_enabled", "tracing",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "default_registry",
+    "FlightRecorder", "recorder",
+    "CostLedger", "LedgerEntry", "StraggleStats", "cost_ledger",
+]

@@ -1,0 +1,210 @@
+"""Trace-safe structured span tracer (`$SPIN_TRACE`).
+
+The recursion, the planner, the worker pool, and the serving tick loop all
+emit *spans* — `{name, kind, t0, t1, attrs, thread}` records — into one
+process-global `SpanTracer`. Three properties define the design:
+
+  * **Zero overhead when off.** Every instrumentation site is guarded by a
+    single attribute read (`if TRACER.enabled:`); with `SPIN_TRACE` unset no
+    span object is built, no attribute dict is materialized, and — the hard
+    requirement — no `block_until_ready`/host sync is ever inserted on the
+    jitted hot path. `tests/test_obs_overhead.py` proves the compiled
+    program is identical with tracing on and off.
+  * **Trace-time emission for jitted code.** The whole Algorithm-2
+    recursion compiles into ONE XLA program, so there are no per-level
+    Python events at *run* time — the per-level spans are emitted while JAX
+    traces the recursion (once per jit cache entry). Their durations
+    measure trace cost; their *structure* (level, grid, engine) is the
+    recursion's, and is what the op-count-oracle tests check. A re-run that
+    hits the jit cache emits no new recursion spans — by design.
+  * **Profiler bridging.** When tracing is on, spans open a
+    `jax.profiler.TraceAnnotation` (host-side spans) or a
+    `jax.named_scope` (inside-jit spans), so a captured profile shows the
+    same names this module records.
+
+Every span is also mirrored into the flight recorder's ring buffer
+(`repro.obs.flight`) so a post-mortem dump carries the trace tail.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+import time
+from typing import Any, Iterator, Optional
+
+from repro import envconfig
+
+__all__ = ["Span", "SpanTracer", "TRACER", "tracer", "trace_enabled",
+           "tracing", "refresh", "TRACE_ENV", "TRACE_DIR_ENV"]
+
+TRACE_ENV = "SPIN_TRACE"
+TRACE_DIR_ENV = "SPIN_TRACE_DIR"
+
+
+@dataclasses.dataclass
+class Span:
+    """One structured event. Point events have t1 == t0."""
+
+    name: str
+    kind: str                 # "recursion_level" | "planner_decision" | ...
+    t0: float
+    t1: float
+    attrs: dict[str, Any]
+    thread: int
+
+    @property
+    def duration_s(self) -> float:
+        return self.t1 - self.t0
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "kind": self.kind, "t0": self.t0,
+                "t1": self.t1, "duration_s": self.duration_s,
+                "thread": self.thread, **self.attrs}
+
+
+class SpanTracer:
+    """Bounded in-memory span store with an `enabled` fast-path guard.
+
+    `enabled` is a plain attribute, not a property: the disabled-path cost
+    at every instrumentation site is one LOAD_ATTR. Flipping it is done via
+    `tracing(...)` (tests) or `refresh()` (env changes mid-process).
+    """
+
+    def __init__(self, *, enabled: bool | None = None, capacity: int = 65536,
+                 clock=time.perf_counter):
+        self.enabled = (envconfig.env_bool(TRACE_ENV)
+                        if enabled is None else bool(enabled))
+        self.capacity = capacity
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._spans: list[Span] = []
+        self._dropped = 0
+
+    # -- recording -----------------------------------------------------------
+
+    def _store(self, span: Span) -> None:
+        with self._lock:
+            if len(self._spans) >= self.capacity:
+                self._dropped += 1
+                return
+            self._spans.append(span)
+        # Mirror into the flight recorder so crash dumps carry the tail.
+        # Merged dict, attrs last: an event that carries its own name or
+        # duration_s attr (e.g. worker.done's shard duration) must override
+        # the span-level value, not raise a duplicate-kwarg TypeError.
+        from . import flight
+
+        flight.recorder().record(span.kind, **{
+            "name": span.name, "duration_s": span.duration_s, **span.attrs})
+
+    def event(self, name: str, kind: str, **attrs) -> Optional[Span]:
+        """Record a point event (no duration). No-op when disabled."""
+        if not self.enabled:
+            return None
+        now = self._clock()
+        span = Span(name=name, kind=kind, t0=now, t1=now, attrs=attrs,
+                    thread=threading.get_ident())
+        self._store(span)
+        return span
+
+    @contextlib.contextmanager
+    def span(self, name: str, kind: str, *, named_scope: bool = False,
+             **attrs) -> Iterator[Optional[Span]]:
+        """Timed span context. `named_scope=True` bridges via
+        `jax.named_scope` (legal inside jit tracing — pure metadata);
+        the default bridges via `jax.profiler.TraceAnnotation` (host-side
+        only). Call sites must still guard with `if TRACER.enabled:` —
+        entering a contextmanager is NOT free."""
+        if not self.enabled:
+            yield None
+            return
+        ctx = _named_scope(name) if named_scope else _trace_annotation(name)
+        t0 = self._clock()
+        span = Span(name=name, kind=kind, t0=t0, t1=t0, attrs=attrs,
+                    thread=threading.get_ident())
+        try:
+            with ctx:
+                yield span
+        finally:
+            span.t1 = self._clock()
+            self._store(span)
+
+    # -- reading -------------------------------------------------------------
+
+    def spans(self, kind: str | None = None, name: str | None = None
+              ) -> list[Span]:
+        with self._lock:
+            out = list(self._spans)
+        if kind is not None:
+            out = [s for s in out if s.kind == kind]
+        if name is not None:
+            out = [s for s in out if s.name == name]
+        return out
+
+    @property
+    def dropped(self) -> int:
+        return self._dropped
+
+    def clear(self) -> None:
+        with self._lock:
+            self._spans.clear()
+            self._dropped = 0
+
+    def refresh(self) -> bool:
+        """Re-read $SPIN_TRACE (for processes that flip it mid-run)."""
+        self.enabled = envconfig.env_bool(TRACE_ENV)
+        return self.enabled
+
+
+def _trace_annotation(name: str):
+    try:
+        import jax
+
+        return jax.profiler.TraceAnnotation(name)
+    except Exception:                                  # pragma: no cover
+        return contextlib.nullcontext()
+
+
+def _named_scope(name: str):
+    try:
+        import jax
+
+        return jax.named_scope(name)
+    except Exception:                                  # pragma: no cover
+        return contextlib.nullcontext()
+
+
+# The process-global tracer every subsystem guards on. Import-time env read
+# only — no jax import, no side effects.
+TRACER = SpanTracer()
+
+
+def tracer() -> SpanTracer:
+    return TRACER
+
+
+def trace_enabled() -> bool:
+    return TRACER.enabled
+
+
+def refresh() -> bool:
+    return TRACER.refresh()
+
+
+@contextlib.contextmanager
+def tracing(enabled: bool = True, *, clear: bool = False) -> Iterator[SpanTracer]:
+    """Temporarily flip the global tracer (tests, benchmark sections).
+
+    `clear=True` empties the span store on entry so assertions see only the
+    spans of the guarded region. The previous enabled state is restored.
+    """
+    prev = TRACER.enabled
+    if clear:
+        TRACER.clear()
+    TRACER.enabled = bool(enabled)
+    try:
+        yield TRACER
+    finally:
+        TRACER.enabled = prev

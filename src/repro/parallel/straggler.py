@@ -37,12 +37,15 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import os
 import threading
 import time
 from typing import Any, Callable, Optional, Sequence
 
 import numpy as np
+
+from repro.obs import flight as _flight
+from repro.obs.registry import default_registry as _default_registry
+from repro.obs.trace import TRACER as _TRACER
 
 __all__ = [
     "WorkerFailure", "ShardTimeout", "InsufficientWorkers",
@@ -54,6 +57,17 @@ __all__ = [
 ]
 
 FAULT_PLAN_ENV = "SPIN_FAULT_PLAN"
+
+
+def _timeline(event: str, **attrs) -> None:
+    """One worker-timeline event: a tracer span when $SPIN_TRACE is on
+    (the tracer mirrors every span into the flight recorder), else a
+    direct flight-recorder append — the ring always carries the timeline
+    a failure dump needs, and nothing is recorded twice."""
+    if _TRACER.enabled:
+        _TRACER.event(event, "worker_event", **attrs)
+    else:
+        _flight.recorder().record("worker_event", name=event, **attrs)
 
 
 class WorkerFailure(RuntimeError):
@@ -159,7 +173,9 @@ class FaultPlan:
 
     @classmethod
     def from_env(cls) -> Optional["FaultPlan"]:
-        payload = os.environ.get(FAULT_PLAN_ENV)
+        from repro import envconfig
+
+        payload = envconfig.env_raw(FAULT_PLAN_ENV)
         return cls.from_json(payload) if payload else None
 
 
@@ -485,8 +501,11 @@ class WorkerPool:
 
         def _worker(rank: int):
             tracker.record_start(rank)
+            _timeline("worker.start", rank=rank)
 
             def attempt(i: int):
+                if i > 0:
+                    _timeline("worker.retry", rank=rank, attempt=i)
                 if self.fault_plan is not None:
                     self.fault_plan.apply(rank, step=i)
                 tracker.heartbeat(rank)
@@ -497,10 +516,15 @@ class WorkerPool:
                     attempt, retries=self.retries,
                     base_s=self.backoff_base_s)
                 tracker.done(rank)
+                _timeline("worker.done", rank=rank, attempts=used,
+                          duration_s=tracker.durations.get(rank))
                 with lock:
                     results[rank] = res
                     attempts[rank] = used
             except WorkerFailure as e:
+                _timeline("worker.failed", rank=rank,
+                          attempts=self.retries + 1, error=str(e))
+                _flight.recorder().dump("worker-failure")
                 with lock:
                     errors[rank] = e
                     attempts[rank] = self.retries + 1
@@ -516,20 +540,36 @@ class WorkerPool:
             if ready(done):
                 break
             for rank in tracker.outstanding():
-                if rank not in failed and tracker.overdue(
-                        rank, factor=self.deadline_factor,
-                        floor=self.min_deadline_s):
+                if rank not in failed and rank not in stragglers \
+                        and tracker.overdue(
+                            rank, factor=self.deadline_factor,
+                            floor=self.min_deadline_s):
                     stragglers.add(rank)
+                    _timeline("worker.overdue", rank=rank,
+                              median_shard_s=tracker.median())
             if len(done) + len(failed) == w:
+                _timeline("pool.quorum_failed", done=sorted(done),
+                          failed=sorted(failed), need=need)
+                _flight.recorder().dump("insufficient-workers")
                 raise InsufficientWorkers(
                     f"all workers finished but quorum not met: "
                     f"{sorted(done)} succeeded, {sorted(failed)} failed")
             if (self.overall_timeout_s is not None
                     and time.monotonic() - t0 > self.overall_timeout_s):
+                _timeline("pool.timeout", done=sorted(done),
+                          failed=sorted(failed),
+                          timeout_s=self.overall_timeout_s)
+                _flight.recorder().dump("pool-timeout")
                 raise InsufficientWorkers(
                     f"quorum not met within {self.overall_timeout_s}s: "
                     f"{sorted(done)} succeeded, {sorted(failed)} failed")
             time.sleep(self.poll_s)
+        if stragglers:
+            # Quorum met with workers left overdue: the postmortem everyone
+            # asks for after a chaos run — dump the timeline unprompted.
+            _timeline("pool.quorum_with_stragglers",
+                      stragglers=sorted(stragglers), done=sorted(done))
+            _flight.recorder().dump("stragglers")
         with lock:
             return PoolReport(
                 results=dict(results), errors=dict(errors),
@@ -617,10 +657,19 @@ def coded_inverse(a, config: CodedConfig | None = None, *,
     redundancy = cfg.redundancy
     if redundancy is None:
         from repro.core.costmodel import plan_redundancy
+        from repro.obs import ledger as obs_ledger
 
+        # Observed straggle history (repro.obs.ledger) replaces the static
+        # straggler_prob guess once enough coded runs are on record — the
+        # feedback loop ROADMAP item 2 was missing.
+        prob = obs_ledger.ledger().observed_straggler_prob(
+            cfg.straggler_prob)
         redundancy = plan_redundancy(
-            cfg.workers, straggler_prob=cfg.straggler_prob,
+            cfg.workers, straggler_prob=prob,
             straggler_slowdown=cfg.straggler_slowdown, scheme=cfg.scheme)
+        _timeline("coded.redundancy_planned", workers=cfg.workers,
+                  redundancy=redundancy, straggler_prob=prob,
+                  observed=prob != cfg.straggler_prob)
     layout = CodedLayout.build(n, cfg.workers, redundancy, cfg.scheme)
     rhs_panels = [jnp.asarray(layout.worker_rhs(r, np.float32),
                               dtype=dtype) for r in range(cfg.workers)]
@@ -656,4 +705,40 @@ def coded_inverse(a, config: CodedConfig | None = None, *,
         attempts=report.attempts,
         wall_s=report.wall_s,
         median_shard_s=report.median_shard_s)
+    _timeline("coded.decode", used_ranks=run.used_ranks,
+              stragglers=run.stragglers, failed=run.failed,
+              wall_s=run.wall_s, scheme=layout.scheme)
+    _publish_coded_run(run, cfg.workers)
     return jnp.asarray(inv, dtype=dtype), run
+
+
+def _publish_coded_run(run: CodedRunReport, workers: int) -> None:
+    """Surface a CodedRunReport beyond its caller's stack frame: fold it
+    into the cost ledger's straggle statistics (feeding the next
+    `plan_redundancy` call) and publish it to the default metrics registry
+    so serving dashboards (`SpinService.metrics()["registry"]`) carry the
+    straggle history."""
+    from repro.obs import ledger as obs_ledger
+
+    obs_ledger.ledger().record_coded_run(run, workers)
+    reg = _default_registry()
+    reg.counter("spin_coded_runs_total",
+                "Coded inversions completed").inc()
+    reg.counter("spin_coded_workers_total",
+                "Worker executions launched by coded runs").inc(workers)
+    reg.counter("spin_coded_stragglers_total",
+                "Workers declared overdue during coded runs"
+                ).inc(len(run.stragglers))
+    reg.counter("spin_coded_worker_failures_total",
+                "Workers that exhausted retries").inc(len(run.failed))
+    reg.counter("spin_coded_retries_total",
+                "Retry attempts beyond the first, across workers").inc(
+                    sum(max(a - 1, 0) for a in run.attempts.values()))
+    reg.gauge("spin_coded_last_used_ranks",
+              "Ranks whose panels fed the last decode").set(
+                  len(run.used_ranks))
+    reg.gauge("spin_coded_last_median_shard_seconds",
+              "Median completed-shard seconds of the last coded run").set(
+                  run.median_shard_s or 0.0)
+    reg.histogram("spin_coded_wall_seconds",
+                  "Coded-inversion wall time").observe(run.wall_s)

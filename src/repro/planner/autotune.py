@@ -35,6 +35,7 @@ from repro.core.costmodel import (DTYPE_BYTES, STRASSEN_CUTOFF, TPU_V5E,
                                   spin_cost, strassen_cost,
                                   strassen_multiply_counts,
                                   tpu_roofline_cost)
+from repro.obs.trace import TRACER as _TRACER
 
 from .plan import Plan, ProblemSignature
 
@@ -282,6 +283,16 @@ def autotune(sig: ProblemSignature, candidates: list[Plan], *,
     """
     ranked = rank_plans(sig, candidates, calibration)
     if not measure:
+        if _TRACER.enabled:
+            _TRACER.event(
+                "planner.rank", "planner_decision", sig=sig.key(),
+                decision="costmodel", candidates=len(candidates),
+                chosen=ranked[0].to_dict(),
+                modeled_top=[{"block_size": p.block_size,
+                              "engine": p.multiply_engine,
+                              "leaf_solver": p.leaf_solver,
+                              "predicted_s": p.predicted_s}
+                             for p in ranked[:4]])
         return ranked[0], None
 
     short = ranked if top_k is None else ranked[:max(top_k, 1)]
@@ -319,4 +330,16 @@ def autotune(sig: ProblemSignature, candidates: list[Plan], *,
         fit = fit_scale(spin_cost, pts, n=sig.n, cores=sig.cores)
         new_calib = {"t_flop": fit.t_flop, "t_leaf": fit.t_leaf,
                      "t_block_op": fit.t_block_op, "t_elem": fit.t_elem}
+    if _TRACER.enabled:
+        _TRACER.event(
+            "planner.measure", "planner_decision", sig=sig.key(),
+            decision="measured", candidates=len(candidates),
+            measured=len(short), behavior_groups=len(uniq),
+            chosen=best.to_dict(), calibrated=new_calib is not None,
+            microbench=[{"block_size": p.block_size,
+                         "engine": p.multiply_engine,
+                         "leaf_solver": p.leaf_solver,
+                         "predicted_s": p.predicted_s,
+                         "measured_s": p.measured_s}
+                        for p in timed])
     return best, new_calib

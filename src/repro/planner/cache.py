@@ -48,7 +48,9 @@ _ENV_VAR = "SPIN_PLAN_CACHE"
 
 
 def default_cache_path() -> str:
-    env = os.environ.get(_ENV_VAR)
+    from repro import envconfig
+
+    env = envconfig.env_str(_ENV_VAR)
     if env:
         return env
     base = os.environ.get("XDG_CACHE_HOME",

@@ -15,6 +15,7 @@ and issues no computation.
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +23,7 @@ import jax.numpy as jnp
 from repro.core.blockmatrix import BlockMatrix
 from repro.core.multiply import multiply_engine
 from repro.core.newton_schulz import newton_schulz_polish
+from repro.obs.trace import TRACER as _TRACER
 
 from .autotune import autotune as _autotune_plans
 from .cache import PlanCache, default_cache
@@ -83,6 +85,10 @@ def get_plan(kind: str, n: int, dtype=jnp.float32, *,
     cached = cache.get(sig)
     if cached is not None and not force_replan:
         if not (do_measure and cached.source == "costmodel"):
+            if _TRACER.enabled:
+                _TRACER.event("planner.plan", "planner_decision",
+                              sig=sig.key(), decision="cache_hit",
+                              plan=cached.to_dict())
             return cached
 
     candidates = enumerate_plans(sig, **enumerate_kw)
@@ -95,6 +101,11 @@ def get_plan(kind: str, n: int, dtype=jnp.float32, *,
     cache.put(sig, plan)
     if calib:
         cache.put_calibration(sig, calib)
+    if _TRACER.enabled:
+        _TRACER.event("planner.plan", "planner_decision", sig=sig.key(),
+                      decision="autotuned", measured=do_measure,
+                      candidates=len(candidates), plan=plan.to_dict(),
+                      calibrated=calib is not None)
     return plan
 
 
@@ -186,6 +197,37 @@ def execute_solve(plan: Plan, dense: jax.Array, rhs: jax.Array,
 # ---------------------------------------------------------------------------
 
 
+def _ledger_record(kind: str, plan: Plan, dense: jax.Array,
+                   measured_s: float) -> None:
+    """Record one traced planned execution into the cost ledger.
+
+    Only called under $SPIN_TRACE (the caller paid a block_until_ready to
+    get a real wall time). The prediction is the plan's own `predicted_s`
+    provenance when the autotuner annotated it, else `predict_cost` under
+    the current signature — both are the Lemma-4.1 / roofline model.
+    """
+    from repro.obs import ledger as obs_ledger
+
+    from .autotune import predict_cost
+    from .plan import signature_for
+
+    n = int(dense.shape[0])
+    sig = signature_for(kind, n, dense.dtype)
+    pred = plan.predicted_s
+    if pred is None:
+        try:
+            pred = predict_cost(sig, plan)
+        except Exception:
+            pred = None
+    entry = obs_ledger.ledger().record_solve(
+        kind=kind, n=n, plan=plan, backend=sig.backend,
+        dtype=jnp.dtype(dense.dtype).name, measured_s=measured_s,
+        predicted_s=pred)
+    attrs = entry.to_dict()
+    attrs["solve_kind"] = attrs.pop("kind")   # "kind" names the span kind
+    _TRACER.event("ledger.solve", "cost_ledger", **attrs)
+
+
 def plan_inverse(dense: jax.Array, *, plan: Plan | None = None,
                  measure: bool | str = "auto",
                  cache: PlanCache | None = None,
@@ -194,11 +236,22 @@ def plan_inverse(dense: jax.Array, *, plan: Plan | None = None,
 
     Equivalent to `spin_inverse_dense(dense, p.block_size, p.leaf_solver)`
     under `p`'s multiply engine — bitwise, when `p` has no refinement stage.
+    Under $SPIN_TRACE the execution is synchronized and its modeled vs
+    measured seconds are recorded in the cost ledger (repro.obs.ledger);
+    untraced calls keep XLA's async dispatch untouched.
     """
     if plan is None:
         plan = get_plan("inverse", dense.shape[0], dense.dtype,
                         measure=measure, cache=cache, **plan_kw)
-    out = execute_inverse(plan, dense)
+    if _TRACER.enabled:
+        with _TRACER.span("plan.inverse", "solve", n=int(dense.shape[0]),
+                          block_size=plan.block_size,
+                          engine=plan.multiply_engine):
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(execute_inverse(plan, dense))
+            _ledger_record("inverse", plan, dense, time.perf_counter() - t0)
+    else:
+        out = execute_inverse(plan, dense)
     return (out, plan) if return_plan else out
 
 
@@ -206,11 +259,22 @@ def plan_solve(dense: jax.Array, rhs: jax.Array, *, plan: Plan | None = None,
                measure: bool | str = "auto",
                cache: PlanCache | None = None,
                return_plan: bool = False, **plan_kw):
-    """Solve A X = B with an autotuned plan (inverse-free SPIN recursion)."""
+    """Solve A X = B with an autotuned plan (inverse-free SPIN recursion).
+
+    Traced calls record modeled-vs-measured seconds like `plan_inverse`.
+    """
     if plan is None:
         plan = get_plan("solve", dense.shape[0], dense.dtype,
                         measure=measure, cache=cache, **plan_kw)
-    out = execute_solve(plan, dense, rhs)
+    if _TRACER.enabled:
+        with _TRACER.span("plan.solve", "solve", n=int(dense.shape[0]),
+                          block_size=plan.block_size,
+                          engine=plan.multiply_engine):
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(execute_solve(plan, dense, rhs))
+            _ledger_record("solve", plan, dense, time.perf_counter() - t0)
+    else:
+        out = execute_solve(plan, dense, rhs)
     return (out, plan) if return_plan else out
 
 

@@ -129,6 +129,8 @@ from repro.core.solver_ckpt import validate_snapshot_key as \
 from repro.core.solve import (sketched_approx_inverse, spin_solve_dense,
                               spin_solve_sharded)
 from repro.core.spin import spin_inverse_dense, spin_inverse_sharded
+from repro.obs import flight as _flight
+from repro.obs.trace import TRACER as _TRACER
 from repro.core.update import (DriftTracker, add_low_rank, apply_inverse,
                                block_update_factors,
                                estimate_inverse_residual,
@@ -798,6 +800,14 @@ class SpinService:
         from the true tick count. Returns the number of live slots after
         recycling (always 0 today — solves are single-shot — but the
         contract mirrors ServingEngine)."""
+        if not _TRACER.enabled:
+            return self._tick()
+        with _TRACER.span("serve.tick", "serve_tick", tick=self.ticks + 1,
+                          queued=len(self._queue),
+                          live_slots=len(self._live)):
+            return self._tick()
+
+    def _tick(self) -> int:
         self.ticks += 1
         self._admit()
         self._metrics.observe_queue_depth(len(self._queue))
@@ -833,6 +843,13 @@ class SpinService:
                     self._recycle(req)
                 self.stats["batch_failures"] += 1
                 self._metrics.count("batch_failures")
+                # Post-mortem: the recent event window (worker timeline,
+                # prior failures) is worth more than this one traceback.
+                _flight.recorder().record(
+                    "serve_event", name="batch.failed", tick=self.ticks,
+                    matrix_id=matrix_id, cols=int(rhs.shape[1]),
+                    requests=len(reqs), error=f"{type(e).__name__}: {e}")
+                _flight.recorder().dump("batch-failure")
                 continue
             col = 0
             now = self._clock()
@@ -883,6 +900,9 @@ class SpinService:
                              "max_resident": self.max_resident}
         snap["ticks"] = self.ticks
         snap["stats"] = dict(self.stats)
+        # additive: the repro.obs registry view of the same service (plus
+        # anything else in this process publishing there, e.g. coded runs)
+        snap["registry"] = self._metrics.registry.to_json()
         return snap
 
     # -- execution -----------------------------------------------------------
@@ -921,10 +941,19 @@ class SpinService:
                 state.degraded = True
                 state.background = task      # still running; lands later
                 self.stats["shard_timeouts"] += 1
+                _flight.recorder().record(
+                    "serve_event", name="degraded.entered", tick=self.ticks,
+                    matrix_id=state.matrix_id, cause="shard_timeout",
+                    deadline_s=self.solve_deadline_s)
+                _flight.recorder().dump("degraded-shard-timeout")
             except WorkerFailure:
                 state.degraded = True
                 state.background = None      # dead, nothing to wait on
                 self.stats["shard_failures"] += 1
+                _flight.recorder().record(
+                    "serve_event", name="degraded.entered", tick=self.ticks,
+                    matrix_id=state.matrix_id, cause="worker_failure")
+                _flight.recorder().dump("degraded-worker-failure")
         if state.degraded:
             sketch = self._ensure_sketch(state)
             state.degraded_serves += 1
@@ -995,6 +1024,10 @@ class SpinService:
         self._factorize(state)
         state.refactors += 1
         self.stats["recoveries"] += 1
+        # record-only: a recovery is good news, no dump needed
+        _flight.recorder().record(
+            "serve_event", name="degraded.recovered", tick=self.ticks,
+            matrix_id=state.matrix_id, degraded_serves=state.degraded_serves)
 
     def _apply_update(self, req: UpdateRequest) -> None:
         state = self._matrices[req.matrix_id]

@@ -1,0 +1,568 @@
+"""Observability layer (repro.obs): tracer, registry, flight recorder,
+cost ledger, env-knob registry — plus the cross-subsystem acceptance paths
+(recursion spans vs the op-count oracle, planner decision records, the
+modeled-vs-measured ledger, fault-injected flight dumps).
+"""
+
+import json
+import re
+import threading
+from pathlib import Path
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import envconfig
+from repro.core.blockmatrix import BlockMatrix
+from repro.core.spin import spin_inverse, spin_inverse_dense
+from repro.core.verify import expected_spin_counts, residual_tolerance
+from repro.obs import flight as obs_flight
+from repro.obs import ledger as obs_ledger
+from repro.obs import registry as obs_registry
+from repro.obs import trace as obs_trace
+from repro.obs.flight import FlightRecorder
+from repro.obs.ledger import CostLedger, LedgerEntry
+from repro.obs.registry import MetricsRegistry
+from repro.obs.trace import TRACER, tracing
+from repro.parallel.straggler import CodedConfig, FaultPlan, coded_inverse
+from repro.planner.cache import PlanCache
+from repro.planner.dispatch import get_plan, plan_inverse
+
+SRC = Path(__file__).resolve().parent.parent / "src"
+
+
+def make_spd(n, key, dtype=jnp.float32):
+    m = jax.random.normal(key, (n, n), dtype=jnp.float32)
+    a = m @ m.T / n + jnp.eye(n, dtype=jnp.float32) * n
+    return a.astype(dtype)
+
+
+@pytest.fixture
+def fresh_obs():
+    """Hermetic observability globals: swap in a fresh registry, flight
+    recorder, and cost ledger; clear the tracer; restore everything."""
+    prev_reg = obs_registry.set_default_registry(MetricsRegistry())
+    prev_rec = obs_flight.set_recorder(FlightRecorder(capacity=256))
+    prev_led = obs_ledger.set_ledger(CostLedger())
+    TRACER.clear()
+    try:
+        yield SimpleNamespace(registry=obs_registry.default_registry(),
+                              recorder=obs_flight.recorder(),
+                              ledger=obs_ledger.ledger())
+    finally:
+        obs_registry.set_default_registry(prev_reg)
+        obs_flight.set_recorder(prev_rec)
+        obs_ledger.set_ledger(prev_led)
+        TRACER.clear()
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_counter_labels_and_negative_rejected():
+    reg = MetricsRegistry()
+    c = reg.counter("spin_test_total", "help text")
+    c.inc()
+    c.inc(2, path="maintained")
+    c.inc(path="maintained")
+    assert c.value() == 1.0
+    assert c.value(path="maintained") == 3.0
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    # get-or-create returns the same object; kind mismatch is an error
+    assert reg.counter("spin_test_total") is c
+    with pytest.raises(TypeError):
+        reg.gauge("spin_test_total")
+
+
+def test_gauge_and_histogram():
+    reg = MetricsRegistry()
+    g = reg.gauge("spin_test_gauge")
+    g.set(4.0)
+    g.inc(1.0)
+    assert g.value() == 5.0
+    h = reg.histogram("spin_test_seconds", buckets=(0.1, 1.0, 10.0))
+    for v in (0.05, 0.5, 5.0, 50.0):
+        h.observe(v)
+    s = h.summary()
+    assert s["count"] == 4 and s["sum"] == pytest.approx(55.55)
+    # buckets are cumulative (one unlabeled series)
+    row = h.collect()[""]
+    assert row["buckets"]["le=0.1"] == 1
+    assert row["buckets"]["le=1"] == 2
+    assert row["buckets"]["le=10"] == 3
+    assert row["buckets"]["le=+Inf"] == 4
+
+
+def test_prometheus_text_and_json_roundtrip():
+    reg = MetricsRegistry()
+    reg.counter("spin_reqs_total", "requests").inc(3, path="recursion")
+    reg.gauge("spin_depth").set(7)
+    reg.histogram("spin_lat_seconds", buckets=(1.0,)).observe(0.5)
+    text = reg.prometheus_text()
+    assert "# TYPE spin_reqs_total counter" in text
+    assert 'spin_reqs_total{path="recursion"} 3.0' in text
+    assert 'spin_lat_seconds_bucket{le="1"} 1' in text
+    assert 'spin_lat_seconds_bucket{le="+Inf"} 1' in text
+    assert "spin_lat_seconds_sum 0.5" in text
+    assert "spin_lat_seconds_count 1" in text
+    blob = json.loads(json.dumps(reg.to_json()))
+    assert blob["spin_reqs_total"]["type"] == "counter"
+    assert blob["spin_depth"]["type"] == "gauge"
+
+
+# ---------------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------------
+
+
+def test_tracer_disabled_records_nothing(fresh_obs):
+    with tracing(False):
+        assert TRACER.event("x", "k", a=1) is None
+        with TRACER.span("y", "k") as s:
+            assert s is None
+    assert TRACER.spans() == []
+
+
+def test_tracer_records_events_and_spans(fresh_obs):
+    with tracing(True, clear=True):
+        TRACER.event("e1", "kind_a", rank=3)
+        with TRACER.span("s1", "kind_b", n=64):
+            pass
+    assert [s.name for s in TRACER.spans(kind="kind_a")] == ["e1"]
+    (sp,) = TRACER.spans(kind="kind_b")
+    assert sp.attrs["n"] == 64 and sp.duration_s >= 0.0
+    # every span is mirrored into the flight ring
+    assert [e["name"] for e in fresh_obs.recorder.events()] == ["e1", "s1"]
+    # previous enabled state restored by the context manager
+    assert TRACER.enabled is False
+
+
+def test_tracing_context_restores_on_exception(fresh_obs):
+    with pytest.raises(RuntimeError):
+        with tracing(True):
+            raise RuntimeError("boom")
+    assert TRACER.enabled is False
+
+
+# ---------------------------------------------------------------------------
+# recursion spans vs the op-count oracle
+# ---------------------------------------------------------------------------
+
+
+def test_recursion_spans_match_oracle_eager(fresh_obs):
+    """Eager BlockMatrix recursion on a 4x4 grid: the span tree is exactly
+    the oracle's — 2^i internal nodes at level i (b-1 total), b leaves."""
+    grid = 4
+    a = BlockMatrix.from_dense(make_spd(8, jax.random.PRNGKey(0)), 2)
+    assert a.grid == grid
+    with tracing(True, clear=True):
+        spin_inverse(a)
+    counts = expected_spin_counts(grid)
+    internal = TRACER.spans(kind="recursion_level", name="spin.level")
+    leaves = TRACER.spans(kind="recursion_level", name="spin.leaf")
+    assert len(internal) == grid - 1 == counts.splits   # 1 split per node
+    assert len(leaves) == grid == counts.leaf_inversions
+    levels = sorted(s.attrs["level"] for s in internal)
+    assert levels == [0, 1, 1]                 # 2^i nodes at level i
+    assert all(s.attrs["level"] == 2 for s in leaves)
+    # grids halve per level
+    by_level = {0: 4, 1: 2}
+    for s in internal:
+        assert s.attrs["grid"] == by_level[s.attrs["level"]]
+
+
+def test_recursion_spans_emitted_at_trace_time_only(fresh_obs):
+    """The jitted dense path emits per-level spans while JAX traces the
+    recursion; a re-run that hits the jit cache emits none — by design."""
+    # a shape no other test compiles: n=20, block 5 -> grid 4
+    a = make_spd(20, jax.random.PRNGKey(1))
+    with tracing(True, clear=True):
+        spin_inverse_dense(a, 5).block_until_ready()
+        first = len(TRACER.spans(kind="recursion_level"))
+        assert first == (4 - 1) + 4            # internal + leaves
+        spin_inverse_dense(a, 5).block_until_ready()
+        assert len(TRACER.spans(kind="recursion_level")) == first
+
+
+# ---------------------------------------------------------------------------
+# planner decision records + cost ledger
+# ---------------------------------------------------------------------------
+
+
+def test_planner_decision_recorded(fresh_obs, tmp_path):
+    cache = PlanCache(str(tmp_path / "plans.json"))
+    with tracing(True, clear=True):
+        get_plan("inverse", 64, measure=False, cache=cache,
+                 force_replan=True)
+    decisions = TRACER.spans(kind="planner_decision")
+    assert {s.attrs["decision"] for s in decisions} >= {"costmodel",
+                                                        "autotuned"}
+    chosen = [s for s in decisions if s.name == "planner.rank"][0]
+    assert chosen.attrs["candidates"] >= 1
+    assert chosen.attrs["chosen"]["block_size"] >= 1
+    # the second lookup is a cache hit, also recorded
+    with tracing(True, clear=True):
+        get_plan("inverse", 64, measure=False, cache=cache)
+    (hit,) = TRACER.spans(kind="planner_decision")
+    assert hit.attrs["decision"] == "cache_hit"
+
+
+def test_traced_plan_inverse_lands_in_cost_ledger(fresh_obs, tmp_path):
+    cache = PlanCache(str(tmp_path / "plans.json"))
+    a = make_spd(32, jax.random.PRNGKey(2))
+    with tracing(True, clear=True):
+        inv = plan_inverse(a, measure=False, cache=cache)
+    assert float(jnp.abs(a @ inv - jnp.eye(32)).max()) \
+        < residual_tolerance(jnp.float32) * 10
+    (entry,) = fresh_obs.ledger.entries("inverse")
+    assert entry.n == 32 and entry.measured_s > 0.0
+    assert entry.predicted_s is not None and entry.predicted_s > 0.0
+    assert entry.ratio == pytest.approx(entry.predicted_s / entry.measured_s)
+    (span,) = TRACER.spans(kind="cost_ledger")
+    assert span.attrs["measured_s"] == entry.measured_s
+    summary = fresh_obs.ledger.summary()
+    assert summary["entries"] == 1 and summary["mean_ratio"] > 0.0
+
+
+def test_untraced_plan_inverse_stays_async(fresh_obs, tmp_path):
+    """With tracing off the ledger sees nothing: no sync, no measurement."""
+    cache = PlanCache(str(tmp_path / "plans.json"))
+    a = make_spd(32, jax.random.PRNGKey(3))
+    with tracing(False):
+        plan_inverse(a, measure=False, cache=cache)
+    assert fresh_obs.ledger.entries() == []
+    assert TRACER.spans() == []
+
+
+def test_ledger_calibration_roundtrip(fresh_obs, tmp_path):
+    """Measured (grid -> seconds) points from traced runs fit a CostParams
+    scale that lands in the plan cache's calibration table."""
+    led = fresh_obs.ledger
+    # synthetic measurements at three grids of one problem size
+    for b, secs in ((2, 0.08), (4, 0.02), (8, 0.04)):
+        p = SimpleNamespace(block_size=256 // b, leaf_solver="linalg",
+                            multiply_engine="einsum", predicted_s=None,
+                            grid=lambda n, b=b: b)
+        led.record_solve(kind="inverse", n=256, plan=p, backend="cpu",
+                         dtype="float32", measured_s=secs)
+    pts = led.calibration_points("inverse")
+    assert pts[(256, "float32")] == {2: 0.08, 4: 0.02, 8: 0.04}
+    cache = PlanCache(str(tmp_path / "plans.json"))
+    constants = led.flush_calibration(cache, min_grids=3)
+    assert constants and all(v >= 0.0 for v in constants.values())
+
+
+# ---------------------------------------------------------------------------
+# flight recorder
+# ---------------------------------------------------------------------------
+
+
+def test_flight_ring_is_bounded():
+    rec = FlightRecorder(capacity=8)
+    for i in range(20):
+        rec.record("k", i=i)
+    assert len(rec) == 8
+    assert [e["i"] for e in rec.events()] == list(range(12, 20))
+
+
+def test_flight_dump_writes_jsonl(fresh_obs, tmp_path, monkeypatch):
+    monkeypatch.setenv("SPIN_TRACE_DIR", str(tmp_path))
+    rec = fresh_obs.recorder
+    rec.record("worker_event", name="worker.start", rank=0)
+    rec.record("worker_event", name="worker.failed", rank=0, error="boom")
+    path = rec.dump("unit-test")
+    assert path is not None and Path(path).exists()
+    lines = [json.loads(line) for line in
+             Path(path).read_text().splitlines()]
+    assert lines[0]["flight_dump"] == "unit-test"
+    assert lines[0]["events"] == 2
+    assert [ln["name"] for ln in lines[1:]] == ["worker.start",
+                                                "worker.failed"]
+
+
+def test_flight_dump_without_dir_is_noop(fresh_obs, monkeypatch):
+    monkeypatch.delenv("SPIN_TRACE_DIR", raising=False)
+    fresh_obs.recorder.record("k")
+    assert fresh_obs.recorder.dump("nowhere") is None
+
+
+# ---------------------------------------------------------------------------
+# fault-injected coded run: timeline + dump + registry metrics
+# ---------------------------------------------------------------------------
+
+
+def test_coded_fault_run_dumps_overdue_retry_timeline(
+        fresh_obs, tmp_path, monkeypatch):
+    """A SPIN_FAULT_PLAN-injected straggler + transient failure leaves a
+    flight dump whose timeline shows the overdue declaration and the retry
+    (the PR's fault acceptance criterion)."""
+    monkeypatch.setenv("SPIN_TRACE_DIR", str(tmp_path))
+    a = make_spd(64, jax.random.PRNGKey(4))
+    cfg = CodedConfig(workers=4, redundancy=0)     # quorum = all 4
+    # warm the jit cache so the median shard time is the hot one
+    coded_inverse(a, cfg, block_size=16, fault_plan=FaultPlan())
+    _, base = coded_inverse(a, cfg, block_size=16, fault_plan=FaultPlan())
+    delay = max(12.0 * (base.median_shard_s or 0.0), 0.6)
+    plan = (FaultPlan().inject_straggler(3, delay)
+            .inject_failure(2, at_level=0, count=1))
+    for k, v in plan.env().items():
+        monkeypatch.setenv(k, v)                   # harness injection channel
+    # The faulted run executes under $SPIN_TRACE: worker events route
+    # through the tracer (which mirrors into the flight ring) rather than
+    # appending directly — the same events must land either way, including
+    # worker.done whose attrs carry their own duration_s (regression:
+    # the tracer's flight mirror must merge, not double-pass, that key).
+    with tracing(True):
+        inv, report = coded_inverse(a, cfg, block_size=16)
+    assert float(jnp.abs(a @ inv - jnp.eye(64)).max()) \
+        < residual_tolerance(jnp.float32) * 10
+    assert 3 in report.stragglers and report.attempts[2] == 2
+    names = [e.get("name") for e in fresh_obs.recorder.events("worker_event")]
+    assert "worker.overdue" in names and "worker.retry" in names
+    assert "worker.done" in names
+    # the quorum-with-stragglers dump wrote the timeline to disk
+    dumps = [p for p in fresh_obs.recorder.dumps
+             if "stragglers" in Path(p).name]
+    assert dumps, f"no straggler dump in {fresh_obs.recorder.dumps}"
+    text = Path(dumps[-1]).read_text()
+    assert "worker.overdue" in text and "worker.retry" in text
+    # CodedRunReport surfaced as registry metrics
+    reg = fresh_obs.registry
+    runs = reg.get("spin_coded_runs_total")
+    assert runs is not None and runs.value() >= 3.0   # warm + base + faulted
+    assert reg.get("spin_coded_stragglers_total").value() >= 1.0
+    assert reg.get("spin_coded_retries_total").value() >= 1.0
+    assert reg.get("spin_coded_wall_seconds").summary()["count"] >= 3
+
+
+def test_observed_straggle_feedback(fresh_obs):
+    led = fresh_obs.ledger
+    mk = lambda stragglers, failed: SimpleNamespace(
+        used_ranks=[0, 1, 2], stragglers=stragglers, failed=failed,
+        attempts={0: 1, 1: 1, 2: 1}, wall_s=0.1, median_shard_s=0.01)
+    # below min_runs the default is trusted verbatim
+    led.record_coded_run(mk([3], []), workers=4)
+    assert led.observed_straggler_prob(0.05) == 0.05
+    led.record_coded_run(mk([], []), workers=4)
+    led.record_coded_run(mk([3], [1]), workers=4)
+    # 3 runs, 12 slots, 2 stragglers + 1 failure -> 3/12
+    assert led.observed_straggler_prob(0.05) == pytest.approx(0.25)
+    stats = led.straggle_stats()
+    assert stats.runs == 3 and stats.per_rank == {"3": 2}
+    # zero observed straggle is floored at default/2, never 0
+    clean = CostLedger()
+    for _ in range(3):
+        clean.record_coded_run(mk([], []), workers=4)
+    assert clean.observed_straggler_prob(0.05) == pytest.approx(0.025)
+
+
+# ---------------------------------------------------------------------------
+# serving metrics: registry mirroring + thread-safety regression
+# ---------------------------------------------------------------------------
+
+
+def test_service_metrics_mirror_into_registry():
+    from repro.serving.metrics import ServiceMetrics
+
+    reg = MetricsRegistry()
+    m = ServiceMetrics(window=16, registry=reg)
+    req = SimpleNamespace(path="maintained", residual_est=None,
+                          submit_t=0.0, admit_t=0.5, finish_t=1.5)
+    m.observe_solve(req)
+    m.observe_queue_depth(3)
+    m.observe_rejection("queue_full")
+    # the snapshot() payload keys are unchanged for existing consumers
+    snap = m.snapshot()
+    assert set(snap) == {"latency_s", "queue_depth", "residual", "counters"}
+    assert snap["counters"]["path_maintained"] == 1
+    assert snap["counters"]["rejected_queue_full"] == 1
+    # ... and the same numbers are scrapable from the registry
+    assert reg.get("spin_serve_requests_total").value(path="maintained") == 1
+    lat = reg.get("spin_serve_latency_seconds")
+    assert lat.summary(stage="solve")["sum"] == pytest.approx(1.0)
+    assert lat.summary(stage="total")["sum"] == pytest.approx(1.5)
+    assert reg.get("spin_serve_events_total").value(
+        event="rejected_queue_full") == 1
+    assert reg.get("spin_serve_queue_depth").summary()["count"] == 1
+
+
+def test_reservoir_concurrent_append_and_read():
+    """Regression: summary()'s sorted(deque) racing record() used to raise
+    'deque mutated during iteration'. 4 writers + a reader must coexist."""
+    from repro.serving.metrics import Reservoir
+
+    res = Reservoir(window=512)
+    res.record(0.0)               # percentile() on an empty window raises
+    stop = threading.Event()
+    errors = []
+
+    def write(k):
+        try:
+            for i in range(5000):
+                res.record(float(i % 97) + k)
+        except Exception as e:                      # pragma: no cover
+            errors.append(e)
+
+    def read():
+        try:
+            while not stop.is_set():
+                res.summary()
+                res.percentile(99.0)
+                len(res)
+        except Exception as e:                      # pragma: no cover
+            errors.append(e)
+
+    reader = threading.Thread(target=read)
+    writers = [threading.Thread(target=write, args=(k,)) for k in range(4)]
+    reader.start()
+    for t in writers:
+        t.start()
+    for t in writers:
+        t.join()
+    stop.set()
+    reader.join()
+    assert not errors
+    assert res.count == 4 * 5000 + 1 and len(res) == 512
+
+
+def test_phase_ledger_concurrent_profile():
+    from repro.serving.metrics import PhaseLedger
+
+    led = PhaseLedger()
+    errors = []
+
+    def work():
+        try:
+            for _ in range(2000):
+                with led.profile("phase"):
+                    pass
+                led.to_dict()
+        except Exception as e:                      # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=work) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert led.to_dict()["phase"]["entries"] == 4 * 2000
+
+
+def test_service_metrics_payload_exposes_registry(fresh_obs):
+    """SpinService.metrics() carries the registry view additively."""
+    from repro.serving.spin_service import SpinService
+
+    svc = SpinService(slots=2)
+    a = make_spd(16, jax.random.PRNGKey(5))
+    svc.add_matrix("m", a, block_size=8)
+    svc.solve("m", jnp.ones(16, jnp.float32))
+    svc.run_until_done()
+    snap = svc.metrics()
+    assert "registry" in snap
+    reqs = snap["registry"]["spin_serve_requests_total"]
+    assert reqs["type"] == "counter"
+    assert sum(reqs["values"].values()) == 1
+
+
+# ---------------------------------------------------------------------------
+# envconfig
+# ---------------------------------------------------------------------------
+
+
+def test_env_accessors(monkeypatch):
+    monkeypatch.setenv("SPIN_TRACE", "1")
+    assert envconfig.env_bool("SPIN_TRACE") is True
+    monkeypatch.setenv("SPIN_TRACE", "off")
+    assert envconfig.env_bool("SPIN_TRACE") is False
+    monkeypatch.setenv("SPIN_TRACE", "yess")
+    with pytest.raises(ValueError, match="boolean-ish"):
+        envconfig.env_bool("SPIN_TRACE")
+    monkeypatch.setenv("SPIN_NUM_PROCS", "3")
+    assert envconfig.env_int("SPIN_NUM_PROCS", 1) == 3
+    monkeypatch.setenv("SPIN_NUM_PROCS", "three")
+    with pytest.raises(ValueError, match="integer"):
+        envconfig.env_int("SPIN_NUM_PROCS")
+    with pytest.raises(KeyError, match="register"):
+        envconfig.env_str("SPIN_NOT_A_KNOB")
+
+
+def test_env_table_covers_all_registered():
+    table = envconfig.env_table_markdown()
+    for name in envconfig.registered_names():
+        assert f"`{name}`" in table
+
+
+def test_every_spin_env_var_in_source_is_registered():
+    """Completeness: any SPIN_* name mentioned anywhere under src/ must be
+    in envconfig's registry — new knobs cannot ship undocumented."""
+    found = set()
+    for path in SRC.rglob("*.py"):
+        found |= set(re.findall(r"\bSPIN_[A-Z][A-Z0-9_]*\b",
+                                path.read_text()))
+    # identifiers that merely *name* env constants, not env vars themselves
+    found -= {"SPIN_ENV_VARS"}
+    registered = set(envconfig.registered_names())
+    assert found <= registered, (
+        f"unregistered SPIN_* env vars in src/: {sorted(found - registered)}"
+        " — add them to repro/envconfig.py")
+
+
+def test_tracer_env_switch(monkeypatch):
+    monkeypatch.setenv("SPIN_TRACE", "1")
+    assert obs_trace.refresh() is True
+    monkeypatch.setenv("SPIN_TRACE", "0")
+    assert obs_trace.refresh() is False
+
+
+# ---------------------------------------------------------------------------
+# end-to-end acceptance: one traced auto-planned inversion
+# ---------------------------------------------------------------------------
+
+
+def test_acceptance_traced_auto_inverse(fresh_obs, tmp_path, monkeypatch):
+    """One traced auto-planned inversion: recursion spans whose level
+    structure matches the oracle, a planner decision record, and a
+    cost-ledger entry carrying BOTH modeled and measured seconds."""
+    monkeypatch.setenv("SPIN_PLAN_CACHE", str(tmp_path / "plans.json"))
+    cache = PlanCache(str(tmp_path / "plans.json"))
+    # a shape nothing else in the suite compiles: n=56, grid 4
+    a = make_spd(56, jax.random.PRNGKey(6))
+    bm = BlockMatrix.from_dense(a, 14)
+    with tracing(True, clear=True):
+        # eager auto recursion: planner decision + per-level spans
+        spin_inverse(bm, auto=True)
+        internal = TRACER.spans(kind="recursion_level", name="spin.level")
+        leaves = TRACER.spans(kind="recursion_level", name="spin.leaf")
+        # planned execution: measured wall clock lands in the cost ledger
+        # (measure=False keeps the autotuner from tracing extra candidate
+        # recursions into the same span store)
+        inv = plan_inverse(a, measure=False, cache=cache)
+    assert float(jnp.abs(a @ inv - jnp.eye(56)).max()) \
+        < residual_tolerance(jnp.float32) * 10
+
+    # (1) per-level recursion spans matching the oracle's level structure:
+    # 2^i internal nodes at level i, grids halving, b leaves at the bottom
+    grid = bm.grid
+    counts = expected_spin_counts(grid)
+    assert len(internal) == grid - 1
+    assert len(leaves) == counts.leaf_inversions == grid
+    for level in range(grid.bit_length() - 1):
+        at = [s for s in internal if s.attrs["level"] == level]
+        assert len(at) == 2 ** level and all(
+            s.attrs["grid"] == grid >> level for s in at)
+
+    # (2) planner decision records for this problem
+    decisions = TRACER.spans(kind="planner_decision")
+    assert any("/n56/" in s.attrs["sig"] for s in decisions)
+
+    # (3) a cost-ledger entry with modeled AND measured time
+    (entry,) = fresh_obs.ledger.entries("inverse")
+    assert entry.n == 56
+    assert entry.measured_s > 0.0 and entry.predicted_s > 0.0
+    assert 0.0 < entry.ratio < float("inf")
